@@ -1,0 +1,236 @@
+"""Benchmark harness — one benchmark per paper table/figure plus kernel and
+selection micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # standard pass
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only fig6
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _t(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / n * 1e6  # us
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _save(name, obj):
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+# ----------------------------------------------------------------------
+# micro: kernels
+# ----------------------------------------------------------------------
+
+def bench_kernels(quick: bool):
+    from repro.kernels import ref
+    from repro.kernels.kmeans import kmeans_assign
+    key = jax.random.PRNGKey(0)
+    n, f, k = (512, 128, 10) if quick else (4096, 256, 10)
+    x = jax.random.normal(key, (n, f))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, f))
+    us_ref = _t(lambda: ref.kmeans_assign_ref(x, c))
+    lab_p = kmeans_assign(x, c, interpret=True)[0]      # compile once
+    us_pal = _t(lambda: kmeans_assign(x, c, interpret=True)[0])
+    match = bool((lab_p == ref.kmeans_assign_ref(x, c)).all())
+    _row("kmeans_assign_ref", us_ref, f"N={n} F={f} K={k}")
+    _row("kmeans_assign_pallas_interp", us_pal, f"match={match}")
+
+    from repro.models.layers import chunked_attention, naive_attention
+    B, S, H, hd = (1, 512, 4, 64) if quick else (2, 2048, 8, 64)
+    q, kk, v = (jax.random.normal(jax.random.fold_in(key, i), (B, S, H, hd))
+                for i in range(3))
+    fa = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True))
+    na = jax.jit(lambda q, k, v: naive_attention(q, k, v, causal=True))
+    us_f = _t(lambda: fa(q, kk, v))
+    us_n = _t(lambda: na(q, kk, v))
+    err = float(jnp.max(jnp.abs(fa(q, kk, v) - na(q, kk, v))))
+    _row("flash_attention_jnp", us_f, f"S={S} err_vs_naive={err:.1e}")
+    _row("naive_attention", us_n, f"S={S}")
+
+
+# ----------------------------------------------------------------------
+# micro: selection / auction throughput
+# ----------------------------------------------------------------------
+
+def bench_selection(quick: bool):
+    from repro.configs.base import FLConfig
+    from repro.core import selection as SEL
+    for n in ([200] if quick else [100, 1000, 10_000]):
+        cfg = FLConfig(num_clients=n, num_clusters=10, select_ratio=0.1,
+                       scheme="gradient_cluster_auction")
+        rng = np.random.default_rng(0)
+        state = SEL.SelectionState(
+            clusters=jnp.asarray(rng.integers(0, 10, n), jnp.int32),
+            residual=jnp.asarray(rng.uniform(50, 100, n), jnp.float32),
+            history=jnp.zeros((n,), jnp.int32),
+            local_sizes=jnp.asarray(rng.integers(100, 1200, n), jnp.int32))
+        key = jax.random.PRNGKey(0)
+        us = _t(lambda: SEL.select_round(state, cfg, key)[0], n=3, warmup=1)
+        _row(f"auction_select_round_N{n}", us, f"K={int(n*0.1)} J=10")
+
+
+# ----------------------------------------------------------------------
+# paper figures (FL simulations)
+# ----------------------------------------------------------------------
+
+def _fl_run(scheme, nu, aggregator, rounds, quick, seed=0, dataset="mnist"):
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.core.server import FederatedServer
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+    nclients = 30 if quick else 100
+    pool = 3000 if quick else 12_000
+    cfg = FLConfig(num_clients=nclients, num_clusters=5 if quick else 10,
+                   select_ratio=0.1, rounds=rounds, lr=0.05,
+                   non_iid_level=nu, scheme=scheme, aggregator=aggregator,
+                   init_energy_mode="normal",
+                   sample_window=30 if quick else 50,
+                   cluster_resamples=3 if quick else 5, seed=seed)
+    train, test = make_image_dataset(dataset, n_train=pool,
+                                     n_test=pool // 6, seed=seed)
+    clients = partition_clients(train.y, cfg, seed=seed)
+    srv = FederatedServer(cfg, cnn_adapter(dataset), train.x, train.y,
+                          clients, {"x": test.x[:500], "y": test.y[:500]})
+    logs = srv.run()
+    return {
+        "acc": [l.test_acc for l in logs],
+        "loss": [l.test_loss for l in logs],
+        "energy_std": [l.energy_std for l in logs],
+        "mean_bid": [l.mean_bid for l in logs],
+        "server_reward": [l.server_reward for l in logs],
+        "client_reward_sum": [l.client_reward_sum for l in logs],
+        "vds_gap": [l.vds_gap for l in logs],
+    }
+
+
+SCHEMES = {
+    "Gradient-Cluster-Auction": "gradient_cluster_auction",
+    "Gradient-Cluster-Random": "gradient_cluster_random",
+    "Weights-Cluster-Random": "weights_cluster_random",
+    "Random": "random",
+}
+
+
+def bench_fig4(quick: bool):
+    """Fig 4: accuracy/loss vs rounds — gradient vs weights clustering vs
+    random FedAvg (nu=1, imbalanced)."""
+    rounds = 8 if quick else 30
+    out = {}
+    for label in ("Gradient-Cluster-Random", "Weights-Cluster-Random",
+                  "Random"):
+        t0 = time.time()
+        r = _fl_run(SCHEMES[label], 1.0, "fedavg", rounds, quick)
+        out[label] = r
+        _row(f"fig4_{label}", (time.time() - t0) * 1e6 / rounds,
+             f"final_acc={r['acc'][-1]:.3f} final_loss={r['loss'][-1]:.3f}")
+    _save("fig4_convergence", out)
+
+
+def bench_fig5(quick: bool):
+    """Fig 5: price (mean winning bid) and reward vs rounds (reward model 2,
+    eq 16)."""
+    rounds = 8 if quick else 30
+    t0 = time.time()
+    r = _fl_run("gradient_cluster_auction", 1.0, "fedavg", rounds, quick)
+    _row("fig5_price_reward", (time.time() - t0) * 1e6 / rounds,
+         f"bid_first={r['mean_bid'][0]:.3f} bid_last={r['mean_bid'][-1]:.3f}"
+         f" server_reward_last={r['server_reward'][-1]:.3f}")
+    _save("fig5_price_reward", r)
+
+
+def bench_fig6_7_8(quick: bool, aggregator: str = "fedavg"):
+    """Fig 6 (Avg) / 7 (Prox) / 8 (nu=0.5): accuracy vs rounds for the
+    schemes at nu in {1, 0.8, 0.5}."""
+    rounds = 8 if quick else 30
+    nus = [1.0] if quick else [1.0, 0.8, 0.5]
+    out = {}
+    for nu in nus:
+        for label, scheme in SCHEMES.items():
+            if label == "Weights-Cluster-Random":
+                continue   # fig6-8 compare the other three
+            t0 = time.time()
+            r = _fl_run(scheme, nu, aggregator, rounds, quick)
+            out[f"{label}_nu{nu}"] = r
+            _row(f"fig6_{aggregator}_nu{nu}_{label}",
+                 (time.time() - t0) * 1e6 / rounds,
+                 f"final_acc={r['acc'][-1]:.3f}")
+    _save(f"fig6_8_accuracy_{aggregator}", out)
+
+
+def bench_fig9_10(quick: bool):
+    """Fig 9/10: energy-balance std vs rounds, all schemes. Needs enough
+    rounds for selection pressure to differentiate the schemes (the paper
+    runs 100+)."""
+    rounds = 8 if quick else 60
+    out = {}
+    for label, scheme in SCHEMES.items():
+        t0 = time.time()
+        r = _fl_run(scheme, 1.0, "fedavg", rounds, quick)
+        out[label] = r["energy_std"]
+        _row(f"fig9_energy_{label}", (time.time() - t0) * 1e6 / rounds,
+             f"final_energy_std={r['energy_std'][-1]:.3f}")
+    _save("fig9_energy_balance", out)
+
+
+def bench_virtual_dataset(quick: bool):
+    """Fig 3 concept: TV distance of the round virtual dataset from the
+    global distribution, cluster selection vs random."""
+    rounds = 10 if quick else 30
+    gaps = {}
+    for label in ("Gradient-Cluster-Random", "Random"):
+        r = _fl_run(SCHEMES[label], 1.0, "fedavg", rounds, quick)
+        gaps[label] = float(np.mean(r["vds_gap"]))
+    _row("fig3_vds_gap", 0.0,
+         f"cluster={gaps['Gradient-Cluster-Random']:.3f} "
+         f"random={gaps['Random']:.3f}")
+    _save("fig3_vds_gap", gaps)
+
+
+BENCHES = {
+    "kernels": bench_kernels,
+    "selection": bench_selection,
+    "fig3": bench_virtual_dataset,
+    "fig4": bench_fig4,
+    "fig5": bench_fig5,
+    "fig6": lambda q: bench_fig6_7_8(q, "fedavg"),
+    "fig7": lambda q: bench_fig6_7_8(q, "fedprox"),
+    "fig9": bench_fig9_10,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help=f"comma list of {list(BENCHES)}")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n](args.quick)
+
+
+if __name__ == "__main__":
+    main()

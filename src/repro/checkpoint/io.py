@@ -1,0 +1,58 @@
+"""Pytree checkpointing (no orbax offline): flatten a pytree to a .npz with
+path-encoded keys + a JSON manifest for dtypes/tree structure. Works for
+model params, optimizer state, and FL server state.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:   # npz can't store ml_dtypes natively
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, step: int = 0, extra: Dict[str, Any] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": list(flat.keys()),
+        "extra": extra or {},
+    }
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays or shapes)."""
+    base = path.removesuffix(".npz")
+    data = np.load(base + ".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    flat_like = _flatten(like)
+    assert set(flat_like) == set(data.files), (
+        f"checkpoint keys mismatch: {set(flat_like) ^ set(data.files)}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    new_leaves = [jnp.asarray(data[k]).astype(l.dtype)
+                  for k, l in zip(paths, leaves_like)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["step"]

@@ -1,0 +1,236 @@
+"""Config system for the repro framework.
+
+Two config families:
+
+* :class:`ModelConfig` — architecture description for the assigned
+  architecture pool (dense / moe / ssm / hybrid / encdec(audio) / vlm).
+  Every architecture is described by a *cycle* of (mixer, ffn) block kinds
+  repeated ``num_layers // len(cycle)`` times so that heterogeneous stacks
+  (jamba's 7:1 mamba:attn interleave, xlstm's sLSTM/mLSTM mix) lower through
+  a single ``lax.scan`` over homogeneous groups.
+
+* :class:`FLConfig` — the paper's federated-learning system knobs (clients,
+  clusters, auction constants of Table I, non-IID level, energy model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# Block kinds usable in a cycle. mixer: how tokens mix along the sequence;
+# ffn: the per-token channel mixer.
+MIXERS = ("attn", "mamba", "mlstm", "slstm")
+FFNS = ("mlp", "moe", "none")
+
+
+@dataclass(frozen=True)
+class BlockSpec:
+    """One position in an architecture's layer cycle."""
+
+    mixer: str = "attn"
+    ffn: str = "mlp"
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS, self.mixer
+        assert self.ffn in FFNS, self.ffn
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description. Shapes follow the assignment table."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # --- attention ---
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0     # 0 -> no RoPE (see learned_pos)
+    learned_pos: bool = False        # learned absolute positions (whisper)
+    sliding_window: int = 0          # 0 -> full attention
+    mlp_kind: str = "swiglu"         # swiglu | gelu
+
+    # --- layer cycle (heterogeneous stacks) ---
+    cycle: Tuple[BlockSpec, ...] = (BlockSpec("attn", "mlp"),)
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    d_ff_expert: int = 0             # expert hidden size (may differ from d_ff)
+    moe_capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+    # --- Mamba (selective SSM) ---
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0           # 0 -> ceil(d_model / 16)
+
+    # --- xLSTM ---
+    xlstm_num_heads: int = 4
+
+    # --- encoder-decoder (whisper-style audio) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500          # stub frame-embedding count
+
+    # --- multimodal prefix (vlm) ---
+    num_prefix_tokens: int = 0       # patch embeddings occupying first slots
+
+    # --- numerics / misc ---
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"          # parameter / activation dtype
+    tie_embeddings: bool = False
+    norm_kind: str = "rmsnorm"       # rmsnorm | layernorm
+    kv_cache_dtype: str = "bfloat16" # bfloat16 | int8  (beyond-paper opt)
+    attn_impl: str = "chunked"       # chunked (jnp flash) | naive | pallas
+    remat: bool = True               # activation checkpointing over blocks
+    remat_policy: str = "nothing"    # nothing | save_block_out: keep each
+    # block's (seq-sharded) output so the backward pass skips the recompute
+    # forward — trades ~2 x L x B x S/16 x D bytes for one whole forward's
+    # FLOPs AND collectives (hillclimb lever, EXPERIMENTS.md §Perf).
+    fsdp_gather_weights: bool = False  # gather FSDP weight shards on use
+    # instead of computing sharded contractions (which all-reduces the much
+    # larger activations). Hillclimb lever — see EXPERIMENTS.md §Perf.
+    source: str = ""                 # citation for the config
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def cycle_len(self) -> int:
+        return len(self.cycle)
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.cycle_len == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"cycle length {self.cycle_len}")
+        return self.num_layers // self.cycle_len
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    def supports_long_context(self) -> bool:
+        """True if decode state is sub-quadratic in context (prompt rule for
+        long_500k): recurrent mixers or bounded (sliding-window) KV."""
+        has_full_attn = any(b.mixer == "attn" for b in self.cycle)
+        if not has_full_attn:
+            return True                      # pure SSM / xLSTM
+        if self.sliding_window > 0:
+            return True                      # bounded KV window
+        # hybrid: a minority of full-attn layers still needs full KV, but the
+        # state is dominated by the recurrent layers; jamba runs 256k context
+        # in practice -> allow when attn layers are a strict minority.
+        n_attn = sum(b.mixer == "attn" for b in self.cycle)
+        return self.family == "hybrid" and n_attn * 2 < self.cycle_len
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One of the four assigned input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in INPUT_SHAPES}
+
+
+# ----------------------------------------------------------------------
+# Federated-learning system config (the paper, Table I defaults)
+# ----------------------------------------------------------------------
+@dataclass(frozen=True)
+class FLConfig:
+    """Auction-based clustered FL system parameters (paper Table I)."""
+
+    num_clients: int = 100
+    num_clusters: int = 10           # J
+    select_ratio: float = 0.10       # K / N
+    local_epochs: int = 1            # I
+    local_momentum: float = 0.0      # client-side SGD momentum
+    rounds: int = 100                # T
+    lr: float = 0.05
+
+    # clustering stage
+    sample_window: int = 50          # s_mm
+    cluster_resamples: int = 5       # T0
+    cluster_feature_dim: int = 256   # projected gradient feature size
+
+    # energy model
+    energy_per_100_samples: float = 0.2   # rho
+    energy_rx: float = 0.01               # E^re per round (receive global model)
+    energy_tx: float = 0.01               # E^se per round (send local model)
+    init_energy_mode: str = "full"        # full | normal  (case1 / case2)
+    init_energy_mean: float = 0.75
+    init_energy_std: float = 0.10
+    init_energy_low: float = 0.50
+    init_energy_high: float = 1.00
+
+    # cost function (Table I)
+    phi: float = 0.5        # resource-cost base, 0<phi<1
+    vartheta: float = 0.5   # service-cost sample base
+    chi: float = 0.7        # weight of sample term in Cs
+    zeta: float = 0.3       # weight of history term in Cs (chi+zeta=1)
+    log_a: float = 2.0      # log base in history term
+    alpha: float = 0.7      # weight of service cost in c
+    gamma: float = 0.3      # weight of resource cost in c (alpha+gamma=1)
+    history_verbatim: bool = False  # eq 13 exactly as printed (see auction.py)
+
+    # reward model
+    reward_model: str = "bid_share"   # per-sample share (eq 15) | bid_share (eq 16)
+    total_reward: float = 100.0       # Rg
+    target_rounds: int = 100          # Nr
+
+    # aggregation
+    aggregator: str = "fedavg"        # fedavg | fedprox
+    fedprox_mu: float = 0.01
+
+    # data heterogeneity (paper §V-A)
+    non_iid_level: float = 1.0        # nu: fraction of a client's data w/ one label
+    imbalance_low: float = 1.0 / 6.0  # local size in [varpi/6, 2*varpi]
+    imbalance_high: float = 2.0
+    num_classes: int = 10
+
+    # selection scheme under test
+    scheme: str = "gradient_cluster_auction"
+    # gradient_cluster_auction | gradient_cluster_random |
+    # weights_cluster_random  | random
+
+    seed: int = 0
+
+    def replace(self, **kw) -> "FLConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,64 @@
+"""Model adapters: the FL server is model-agnostic; an adapter binds a
+trainable model (the paper's CNNs, or any registry transformer) to the
+(loss, grad, metrics) interface the federated loop needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cnn as CNN
+from repro.models import model as MD
+
+
+@dataclass(frozen=True)
+class ModelAdapter:
+    init: Callable[[Any], Any]                  # key -> params
+    loss: Callable[[Any, Dict], jnp.ndarray]    # (params, batch) -> scalar
+    grad: Callable[[Any, Dict], Any]            # (params, batch) -> grads
+    accuracy: Callable[[Any, Dict], jnp.ndarray]
+    batch_fields: tuple = ("x", "y")
+
+
+def cnn_adapter(variant: str) -> ModelAdapter:
+    loss = partial(CNN.cnn_loss, variant=variant)
+    return ModelAdapter(
+        init=lambda key: CNN.init_cnn(key, variant),
+        loss=jax.jit(loss),
+        grad=jax.jit(jax.grad(loss)),
+        accuracy=jax.jit(partial(CNN.cnn_accuracy, variant=variant)),
+    )
+
+
+def transformer_adapter(cfg) -> ModelAdapter:
+    """FL over a registry architecture: batches carry token sequences; the
+    'label' used for non-IID partitioning is the topic id (data pipeline).
+
+    Batch format: {"x": tokens (B, S), "y": topic (unused by loss)}. The LM
+    objective is next-token prediction over x.
+    """
+
+    def loss(params, batch):
+        toks = batch["x"]
+        lm_batch = {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+            "mask": jnp.ones_like(toks[:, 1:], jnp.float32),
+        }
+        return MD.loss_fn(cfg, params, lm_batch)
+
+    def accuracy(params, batch):
+        toks = batch["x"]
+        logits = MD.logits_fn(cfg, params, toks[:, :-1])
+        return (logits.argmax(-1) == toks[:, 1:]).mean()
+
+    return ModelAdapter(
+        init=lambda key: MD.init_params(cfg, key),
+        loss=jax.jit(loss),
+        grad=jax.jit(jax.grad(loss)),
+        accuracy=jax.jit(accuracy),
+    )

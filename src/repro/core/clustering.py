@@ -1,0 +1,172 @@
+"""Gradient-based client clustering (paper §III-C).
+
+Stage-1 of Algorithm 1:
+  1. every client draws ``s_mm`` samples from its local data (the *sample
+     window* — the imbalance fix: every client contributes equally many
+     samples to its clustering feature), repeats ``T0`` times, and averages
+     the gradient of the *initial* global model over the draws;
+  2. the server k-means-clusters the gradient features into J groups.
+
+For LLM-scale models the full gradient is too large to ship; we use a fixed
+random projection of the concatenated (last-block, lm-head) gradient to
+``feature_dim`` — recorded in DESIGN.md as the fleet-scale adaptation. For
+the paper's CNNs the full flattened gradient fits and is used directly.
+
+K-means' assignment step (pairwise distances + argmin) is the fleet-scale
+hotspot and runs through the Pallas kernel (repro.kernels) on TPU; the pure
+jnp path is used on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+
+
+# ----------------------------------------------------------------------
+# gradient features
+# ----------------------------------------------------------------------
+
+def window_indices(key, local_size: int, window: int) -> jnp.ndarray:
+    """Sample-window draw: `window` indices from [0, local_size) (with
+    replacement if the client has fewer samples than the window)."""
+    return jax.random.randint(key, (window,), 0, local_size)
+
+
+def client_gradient_feature(grad_fn: Callable, params, data_x, data_y,
+                            local_size: int, cfg: FLConfig, key,
+                            flatten: bool = True) -> jnp.ndarray:
+    """Mean gradient of the initial model over T0 sample-window draws."""
+    feats = []
+    for t in range(cfg.cluster_resamples):
+        k = jax.random.fold_in(key, t)
+        idx = window_indices(k, local_size, cfg.sample_window)
+        g = grad_fn(params, {"x": data_x[idx], "y": data_y[idx]})
+        feats.append(g)
+    mean_g = jax.tree.map(lambda *xs: sum(xs) / len(xs), *feats)
+    if not flatten:
+        return mean_g
+    leaves = [x.reshape(-1) for x in jax.tree.leaves(mean_g)]
+    return jnp.concatenate(leaves)
+
+
+def random_projection(key, in_dim: int, out_dim: int) -> jnp.ndarray:
+    """Fixed Gaussian projection (Johnson-Lindenstrauss) for LLM gradients."""
+    return jax.random.normal(key, (in_dim, out_dim)) / jnp.sqrt(out_dim)
+
+
+def project_feature(feat: jnp.ndarray, proj: Optional[jnp.ndarray]):
+    return feat if proj is None else feat @ proj
+
+
+# ----------------------------------------------------------------------
+# k-means
+# ----------------------------------------------------------------------
+
+def assign_ref(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp oracle for the Pallas kmeans kernel: argmin_k ||x - c_k||²."""
+    d = ((x[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    return jnp.argmin(d, axis=1)
+
+
+def _kmeanspp_init(features, k, key):
+    """k-means++ seeding: each next centroid sampled with probability
+    proportional to the squared distance from the nearest chosen one."""
+    n = features.shape[0]
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    cent0 = jnp.tile(features[first][None], (k, 1))
+
+    def pick(carry, i):
+        cent, key = carry
+        d = ((features[:, None, :] - cent[None]) ** 2).sum(-1)
+        col = jnp.arange(k)[None, :]
+        d = jnp.where(col < i, d, jnp.inf)
+        dmin = d.min(axis=1)
+        key, kp = jax.random.split(key)
+        p = dmin / jnp.maximum(dmin.sum(), 1e-30)
+        nxt = jax.random.choice(kp, n, p=p)
+        cent = cent.at[i].set(features[nxt])
+        return (cent, key), None
+
+    (cent, _), _ = jax.lax.scan(pick, (cent0, key), jnp.arange(1, k))
+    return cent
+
+
+def kmeans(features: jnp.ndarray, k: int, key, iters: int = 25,
+           assign_fn: Callable = None,
+           restarts: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Lloyd's algorithm with k-means++ seeding and best-of-``restarts``
+    (by inertia). features: (N, F). Returns (labels (N,), centroids (k,F))."""
+    n = features.shape[0]
+    if assign_fn is None:
+        assign_fn = assign_ref
+
+    def one_run(key):
+        cent = _kmeanspp_init(features, k, key)
+
+        def step(cent, _):
+            lab = assign_fn(features, cent)
+            onehot = jax.nn.one_hot(lab, k, dtype=features.dtype)  # (N, k)
+            counts = onehot.sum(0)
+            sums = onehot.T @ features
+            new = jnp.where(counts[:, None] > 0,
+                            sums / jnp.maximum(counts[:, None], 1.0), cent)
+            return new, None
+
+        cent, _ = jax.lax.scan(step, cent, None, length=iters)
+        lab = assign_fn(features, cent)
+        inertia = ((features - cent[lab]) ** 2).sum()
+        return lab, cent, inertia
+
+    best = None
+    for r in range(restarts):
+        lab, cent, inertia = one_run(jax.random.fold_in(key, r))
+        if best is None or float(inertia) < best[2]:
+            best = (lab, cent, float(inertia))
+    return best[0], best[1]
+
+
+# ----------------------------------------------------------------------
+# full clustering stage (Algorithm 1, lines 1-8)
+# ----------------------------------------------------------------------
+
+def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
+                    key, feature_kind: str = "gradient",
+                    local_steps_fn: Callable = None,
+                    assign_fn: Callable = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cluster all clients. client_data: list of (x, y) arrays per client.
+
+    feature_kind:
+      * 'gradient' — the paper's scheme (sample window + T0 mean gradients)
+      * 'weights'  — the Wang et al. [2] baseline: feature = local model
+        delta after one epoch of SGD (needs local_steps_fn).
+
+    Returns (labels (N,), centroids, features).
+    """
+    n = cfg.num_clients
+    feats = []
+    proj = None
+    for i in range(n):
+        x, y = client_data[i]
+        ki = jax.random.fold_in(key, i)
+        if feature_kind == "gradient":
+            f = client_gradient_feature(grad_fn, params, x, y, x.shape[0],
+                                        cfg, ki)
+        else:
+            f = local_steps_fn(params, x, y, ki)
+        if proj is None and f.shape[0] > cfg.cluster_feature_dim * 8:
+            proj = random_projection(jax.random.PRNGKey(1234), f.shape[0],
+                                     cfg.cluster_feature_dim)
+        feats.append(f)
+    feats = jnp.stack(feats)
+    if proj is not None:
+        feats = feats @ proj
+    labels, cent = kmeans(feats, cfg.num_clusters, key,
+                          assign_fn=assign_fn)
+    return labels, cent, feats

@@ -1,0 +1,63 @@
+"""Energy model of the MEC federated system (paper §IV-A).
+
+Every client has a battery expressed in *percent* (0..100). Per training
+round a selected client pays
+
+    E_sum = E_cp + E_cm                                   (eq 9)
+    E_cm  = E_re + E_se                                   (eq 10)
+    E_cp  = Ns_i * rho / 100                              (eq 11)
+
+with rho = "energy per 100 samples" (Table I: 0.2). The paper's headline
+system metric is the **energy balance**: the standard deviation of residual
+energy across all clients (smaller = better balanced).
+
+All state is struct-of-arrays (jnp) so selection math vectorizes on device.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+
+
+def init_energy(cfg: FLConfig, key) -> jnp.ndarray:
+    """Initial residual energy per client, percent scale [0, 100].
+
+    case1 ('full'): everyone at 100%.
+    case2 ('normal'): N(mean, std) truncated to [low, high] (paper §V-A).
+    """
+    n = cfg.num_clients
+    if cfg.init_energy_mode == "full":
+        return jnp.full((n,), 100.0)
+    e = cfg.init_energy_mean * 100.0 + cfg.init_energy_std * 100.0 \
+        * jax.random.truncated_normal(
+            key, (cfg.init_energy_low - cfg.init_energy_mean)
+            / cfg.init_energy_std,
+            (cfg.init_energy_high - cfg.init_energy_mean)
+            / cfg.init_energy_std, (n,))
+    return jnp.clip(e, cfg.init_energy_low * 100.0,
+                    cfg.init_energy_high * 100.0)
+
+
+def compute_cost_energy(local_sizes: jnp.ndarray, cfg: FLConfig) -> jnp.ndarray:
+    """E_cp per client for one local round (eq 11)."""
+    return local_sizes.astype(jnp.float32) * cfg.energy_per_100_samples / 100.0
+
+
+def round_energy(local_sizes: jnp.ndarray, cfg: FLConfig) -> jnp.ndarray:
+    """E_sum per client if selected this round (eq 9-11)."""
+    return (compute_cost_energy(local_sizes, cfg)
+            + cfg.energy_rx + cfg.energy_tx) * cfg.local_epochs
+
+
+def apply_round(residual: jnp.ndarray, selected: jnp.ndarray,
+                local_sizes: jnp.ndarray, cfg: FLConfig) -> jnp.ndarray:
+    """Subtract this round's consumption from selected clients (floored at 0)."""
+    spend = round_energy(local_sizes, cfg) * selected.astype(jnp.float32)
+    return jnp.maximum(residual - spend, 0.0)
+
+
+def energy_balance(residual: jnp.ndarray) -> jnp.ndarray:
+    """The paper's balance metric: std-dev of residual energy (Fig 9/10)."""
+    return jnp.std(residual)

@@ -1,0 +1,127 @@
+"""Per-round client selection (Algorithm 1, lines 10-25) for all four
+schemes compared in the paper:
+
+  * gradient_cluster_auction — the paper's full scheme: per-cluster reverse
+    auction with Nash-equilibrium bids and the s_min sample threshold.
+  * gradient_cluster_random — the paper's clustering with random in-cluster
+    picks (plus the §III-C sample threshold).
+  * weights_cluster_random  — Wang et al. [2] baseline: clusters from local
+    model-weight features, random in-cluster picks.
+  * random                  — FedAvg/FedProx random-K selection.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import auction as A
+from repro.core import energy as E
+
+
+@dataclass
+class SelectionState:
+    """Struct-of-arrays client state used by the selector."""
+
+    clusters: jnp.ndarray        # (N,) int32 cluster id (0 for 'random')
+    residual: jnp.ndarray        # (N,) float32 energy percent
+    history: jnp.ndarray         # (N,) int32 participation rounds so far
+    local_sizes: jnp.ndarray     # (N,) int32 |xi_k|
+
+
+def k_per_cluster(cfg: FLConfig) -> int:
+    k_total = max(int(round(cfg.select_ratio * cfg.num_clients)), 1)
+    return max(k_total // cfg.num_clusters, 1)
+
+
+def _sample_threshold(key, state: SelectionState, cfg: FLConfig,
+                      bids: jnp.ndarray | None) -> jnp.ndarray:
+    """s_min: server picks a random cluster js; among its K_j lowest bidders
+    (auction) or a random member (random schemes), take the minimum local
+    size. Gates auction entry so selected data sizes stay at one level."""
+    kj = k_per_cluster(cfg)
+    js = jax.random.randint(key, (), 0, cfg.num_clusters)
+    in_js = state.clusters == js
+    if bids is not None:
+        win_js = A.select_lowest_bids(
+            jnp.where(in_js, bids, A.INF), in_js, kj)
+        sizes = jnp.where(win_js, state.local_sizes, jnp.int32(2 ** 30))
+        smin = sizes.min()
+        # fall back to 0 if the probe cluster is empty
+        return jnp.where(win_js.any(), smin, 0)
+    # random schemes: one random client's size (paper §III-C)
+    probs = in_js / jnp.maximum(in_js.sum(), 1)
+    pick = jax.random.choice(jax.random.fold_in(key, 1),
+                             state.clusters.shape[0], p=probs)
+    return jnp.where(in_js.any(), state.local_sizes[pick], 0)
+
+
+def _random_per_cluster(key, state: SelectionState, cfg: FLConfig,
+                        eligible: jnp.ndarray) -> jnp.ndarray:
+    """K_j uniform picks per cluster among eligible clients."""
+    kj = k_per_cluster(cfg)
+    n = state.clusters.shape[0]
+    noise = jax.random.uniform(key, (n,))
+    win = jnp.zeros((n,), bool)
+    for j in range(cfg.num_clusters):
+        in_j = (state.clusters == j) & eligible
+        # if nothing is eligible in cluster j, relax to the whole cluster
+        in_j = jnp.where(in_j.any(), in_j, state.clusters == j)
+        keyed = jnp.where(in_j, noise, 2.0)
+        order = jnp.argsort(keyed)
+        ranks = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+        win = win | ((ranks < kj) & in_j)
+    return win
+
+
+def select_round(state: SelectionState, cfg: FLConfig, key
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Run one round of selection. Returns (winner mask (N,) bool, info)."""
+    n = cfg.num_clients
+    k_total = max(int(round(cfg.select_ratio * n)), 1)
+    keys = jax.random.split(key, 4)
+    info: Dict[str, jnp.ndarray] = {}
+
+    if cfg.scheme == "random":
+        idx = jax.random.choice(keys[0], n, (k_total,), replace=False)
+        win = jnp.zeros((n,), bool).at[idx].set(True)
+        info["bids"] = jnp.zeros((n,))
+        return win, info
+
+    if cfg.scheme in ("gradient_cluster_random", "weights_cluster_random"):
+        smin = _sample_threshold(keys[0], state, cfg, None)
+        eligible = state.local_sizes >= smin
+        win = _random_per_cluster(keys[1], state, cfg, eligible)
+        info["bids"] = jnp.zeros((n,))
+        info["s_min"] = smin
+        return win, info
+
+    # ---- gradient_cluster_auction (the paper's scheme) ----
+    nj = jnp.zeros((cfg.num_clusters,), jnp.float32).at[state.clusters].add(1.0)
+    n_of = nj[state.clusters]                       # N_j per client
+    kj = k_per_cluster(cfg)
+    c = A.cost(state.residual, state.local_sizes, state.history, cfg)
+    bids = A.optimal_bid(c, n_of, float(kj))
+    # step 1: probe cluster js fixes the sample threshold
+    smin = _sample_threshold(keys[0], state, cfg, bids)
+    eligible = (state.local_sizes >= smin) & (c < A.INF)
+    # step 2: per-cluster reverse auction among eligible clients
+    cs = A.service_cost(state.local_sizes, state.history, cfg)
+    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+                            cfg.num_clusters, tie_break=cs)
+    info.update(bids=bids, costs=c, s_min=smin,
+                revenue=A.revenue(bids, c, win))
+    return win, info
+
+
+def update_after_round(state: SelectionState, win: jnp.ndarray,
+                       cfg: FLConfig) -> SelectionState:
+    return replace(
+        state,
+        residual=E.apply_round(state.residual, win, state.local_sizes, cfg),
+        history=state.history + win.astype(jnp.int32),
+    )

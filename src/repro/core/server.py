@@ -1,0 +1,207 @@
+"""Federated server: the full Algorithm 1 loop.
+
+Stage 1  (once)    : gradient/weight clustering of all clients.
+Stage 2  (per round): cost -> Nash bids -> s_min threshold -> per-cluster
+                      winners (or the paper's baselines' random picks).
+Stage 3  (per round): winners run I local epochs (FedAvg local SGD, or
+                      FedProx with the proximal term), server aggregates
+                      w_{t+1} = sum_k p_k w^k_{t+1}, energy/history update.
+
+The simulator runs clients sequentially on one host (the paper does the
+same); the *launch* layer maps cohorts onto mesh axes for the TPU-scale
+path — see repro/launch/train.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import clustering as CL
+from repro.core import energy as EN
+from repro.core import selection as SEL
+from repro.core.adapters import ModelAdapter
+from repro.core.auction import reward_bid_share, reward_sample_share
+from repro.optim import apply_updates, fedprox_grad, sgd
+
+
+def _tree_weighted_sum(trees: List[Any], weights: np.ndarray):
+    """sum_k p_k * tree_k."""
+    out = jax.tree.map(lambda x: x * weights[0], trees[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda a, b: a + b * w, out, t)
+    return out
+
+
+@dataclass
+class RoundLog:
+    round: int
+    selected: np.ndarray
+    test_acc: float
+    test_loss: float
+    energy_std: float
+    mean_bid: float
+    server_reward: float
+    client_reward_sum: float
+    vds_gap: float
+
+
+class FederatedServer:
+    def __init__(self, cfg: FLConfig, adapter: ModelAdapter,
+                 x: np.ndarray, y: np.ndarray, clients,
+                 test_batch: Dict[str, np.ndarray],
+                 assign_fn=None, seed: Optional[int] = None):
+        self.cfg = cfg
+        self.adapter = adapter
+        self.x, self.y = x, y
+        self.clients = clients
+        self.test_batch = test_batch
+        self.assign_fn = assign_fn
+        self.key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+        self.params = adapter.init(self._next_key())
+        self.logs: List[RoundLog] = []
+        self._local_step = jax.jit(self._make_local_step())
+
+        sizes = jnp.asarray([c.size for c in clients], jnp.int32)
+        self.state = SEL.SelectionState(
+            clusters=jnp.zeros((cfg.num_clients,), jnp.int32),
+            residual=EN.init_energy(cfg, self._next_key()),
+            history=jnp.zeros((cfg.num_clients,), jnp.int32),
+            local_sizes=sizes,
+        )
+        from repro.data.partition import global_histogram, \
+            client_label_histograms
+        self.global_hist = global_histogram(y, cfg.num_classes)
+        self.client_labels = [y[c.train_idx] for c in clients]
+        self.total_client_reward = 0.0
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _make_local_step(self):
+        _, upd = sgd(self.cfg.lr, momentum=self.cfg.local_momentum)
+
+        def step(params, opt_state, batch, global_params):
+            g = self.adapter.grad(params, batch)
+            if self.cfg.aggregator == "fedprox":
+                g = fedprox_grad(g, params, global_params,
+                                 self.cfg.fedprox_mu)
+            u, opt_state = upd(g, opt_state, params)
+            return apply_updates(params, u), opt_state
+
+        return step
+
+    # ------------------------------------------------------------------
+    def cluster(self):
+        """Stage 1: cluster clients (scheme-dependent feature)."""
+        cfg = self.cfg
+        if cfg.scheme == "random":
+            return
+        feature_kind = ("weights" if cfg.scheme == "weights_cluster_random"
+                        else "gradient")
+        data = [(self.x[c.train_idx], self.y[c.train_idx])
+                for c in self.clients]
+
+        def local_steps_fn(params, x, y, key):
+            # Wang et al. [2] feature: local model delta after 1 epoch SGD
+            init, upd = sgd(cfg.lr)
+            opt = init(params)
+            p = params
+            bs = min(32, x.shape[0])
+            for i in range(0, x.shape[0] - bs + 1, bs):
+                b = {"x": x[i:i + bs], "y": y[i:i + bs]}
+                g = self.adapter.grad(p, b)
+                u, opt = upd(g, opt, p)
+                p = apply_updates(p, u)
+            delta = jax.tree.map(lambda a, b: (a - b).reshape(-1), p, params)
+            return jnp.concatenate(jax.tree.leaves(delta))
+
+        labels, cent, feats = CL.cluster_clients(
+            self.adapter.grad, self.params, data, cfg, self._next_key(),
+            feature_kind=feature_kind, local_steps_fn=local_steps_fn,
+            assign_fn=self.assign_fn)
+        self.state = SEL.SelectionState(
+            clusters=labels.astype(jnp.int32), residual=self.state.residual,
+            history=self.state.history, local_sizes=self.state.local_sizes)
+
+    # ------------------------------------------------------------------
+    def local_train(self, client_idx: int, global_params):
+        cfg = self.cfg
+        c = self.clients[client_idx]
+        x, y = self.x[c.train_idx], self.y[c.train_idx]
+        init, _ = sgd(cfg.lr, momentum=cfg.local_momentum)
+        p = global_params
+        opt = init(p)
+        bs = min(32, len(x))
+        rng = np.random.default_rng(int(self.state.history[client_idx]) * 977
+                                    + client_idx)
+        for _ in range(cfg.local_epochs):
+            order = rng.permutation(len(x))
+            for i in range(0, len(x) - bs + 1, bs):
+                idx = order[i:i + bs]
+                p, opt = self._local_step(
+                    p, opt, {"x": x[idx], "y": y[idx]}, global_params)
+        return p
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> RoundLog:
+        cfg = self.cfg
+        win, info = SEL.select_round(self.state, cfg, self._next_key())
+        win_np = np.asarray(win)
+        sel_idx = np.nonzero(win_np)[0]
+
+        # stage 3: local training + aggregation
+        locals_ = [self.local_train(i, self.params) for i in sel_idx]
+        sizes = np.array([self.clients[i].size for i in sel_idx], np.float64)
+        pk = sizes / sizes.sum() if sizes.sum() else sizes
+        if locals_:
+            self.params = _tree_weighted_sum(locals_, pk)
+
+        # rewards
+        if cfg.reward_model == "bid_share" and "bids" in info:
+            cr, server_r = reward_bid_share(win, info["bids"], cfg)
+        else:
+            cr = reward_sample_share(win, self.state.local_sizes, cfg)
+            server_r = 0.0
+        self.total_client_reward += float(jnp.sum(cr))
+
+        # energy / history
+        self.state = SEL.update_after_round(self.state, win, cfg)
+
+        # evaluation
+        acc = float(self.adapter.accuracy(self.params, self.test_batch))
+        loss = float(self.adapter.loss(self.params, self.test_batch))
+        from repro.core.virtual_dataset import virtual_dataset_gap
+        gap = virtual_dataset_gap(self.client_labels, win_np,
+                                  self.global_hist, cfg.num_classes)
+        bids = info.get("bids")
+        finite = np.asarray(bids)[win_np] if bids is not None else np.zeros(1)
+        log = RoundLog(
+            round=t, selected=sel_idx, test_acc=acc, test_loss=loss,
+            energy_std=float(EN.energy_balance(self.state.residual)),
+            mean_bid=float(np.mean(finite)) if finite.size else 0.0,
+            server_reward=float(server_r),
+            client_reward_sum=float(jnp.sum(cr)),
+            vds_gap=gap)
+        self.logs.append(log)
+        return log
+
+    # ------------------------------------------------------------------
+    def run(self, rounds: Optional[int] = None, verbose: bool = False):
+        self.cluster()
+        T = rounds if rounds is not None else self.cfg.rounds
+        for t in range(T):
+            log = self.run_round(t)
+            if verbose and (t % 5 == 0 or t == T - 1):
+                print(f"  round {t:3d} acc={log.test_acc:.3f} "
+                      f"loss={log.test_loss:.3f} "
+                      f"E_std={log.energy_std:.3f} bid={log.mean_bid:.3f} "
+                      f"vds_gap={log.vds_gap:.3f}")
+        return self.logs

@@ -1,0 +1,50 @@
+"""Federated virtual dataset (paper §III-B).
+
+The virtual dataset of round t is xi_t = union of the selected clients'
+local datasets: distributed SGD over the selected cohort is equivalent to
+centralized (mini-batch) SGD over xi_t (eq 4-8). The selection scheme's job
+is to make the *distribution* of xi_t match the global distribution in every
+round; these helpers measure exactly that (used by tests and benchmarks to
+reproduce the paper's Fig 3/4 reasoning).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def label_histogram(labels: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    h = jnp.zeros((num_classes,)).at[labels].add(1.0)
+    return h / jnp.maximum(h.sum(), 1.0)
+
+
+def virtual_dataset_histogram(client_labels: Sequence[np.ndarray],
+                              selected: np.ndarray,
+                              num_classes: int) -> jnp.ndarray:
+    """Label distribution of xi_t = U_{k in selected} xi_k."""
+    parts = [client_labels[i] for i in np.nonzero(selected)[0]]
+    if not parts:
+        return jnp.full((num_classes,), 1.0 / num_classes)
+    return label_histogram(jnp.concatenate([jnp.asarray(p) for p in parts]),
+                           num_classes)
+
+
+def tv_distance(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Total-variation distance between label distributions — the
+    heterogeneity of xi_t w.r.t. the global distribution."""
+    return 0.5 * jnp.abs(p - q).sum()
+
+
+def virtual_dataset_gap(client_labels, selected, global_hist,
+                        num_classes: int) -> float:
+    """TV(xi_t distribution, global distribution) — smaller means the round's
+    virtual dataset better matches the global data (the paper's goal)."""
+    h = virtual_dataset_histogram(client_labels, selected, num_classes)
+    return float(tv_distance(h, jnp.asarray(global_hist)))
+
+
+def virtual_dataset_size(client_sizes: np.ndarray,
+                         selected: np.ndarray) -> int:
+    return int((client_sizes * selected).sum())

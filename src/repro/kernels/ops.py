@@ -1,0 +1,34 @@
+"""jit'd public wrappers for the Pallas kernels with backend dispatch:
+interpret mode on CPU (this container), compiled Pallas on real TPU,
+pure-jnp reference as an always-available fallback.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.kmeans import kmeans_assign as _kmeans_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def kmeans_assign(x, c, *, impl: str = "auto"):
+    """Returns labels (N,) int32. impl: auto | pallas | ref."""
+    if impl == "ref" or (impl == "auto" and x.shape[0] > 100_000
+                         and not _on_tpu()):
+        # interpret-mode pallas is slow for very large N on CPU
+        return REF.kmeans_assign_ref(x, c)
+    labels, _ = _kmeans_pallas(x, c, interpret=not _on_tpu())
+    return labels
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto"):
+    if impl == "ref":
+        return REF.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=not _on_tpu())

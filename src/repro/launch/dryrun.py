@@ -1,0 +1,508 @@
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware. For every (architecture x input shape x mesh) this lowers and
+compiles the real train/serve step against ShapeDtypeStruct inputs on the
+production mesh, then records memory analysis, FLOPs/bytes and the
+collective schedule for the roofline report.
+
+MUST be run as a module:  PYTHONPATH=src python -m repro.launch.dryrun ...
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count on first init, so this precedes every other import.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, SHAPES_BY_NAME, ShapeConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.optim import OptState
+from repro.sharding import rules as R
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\])")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _parse_type_bytes(ty: str) -> int:
+    """bytes of 'f32[1,2,3]' or tuple '(f32[2], s32[])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(ty):
+        if dt in _DTYPE_BYTES:
+            total += _tensor_bytes(dt, dims)
+    return total
+
+
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%([\w.\-]+),\s*body=%([\w.\-]+)")
+_INT_CONST_RE = re.compile(r"[su]\d+\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m and line.rstrip().endswith("{") \
+                and " = " not in line.split("(")[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list) -> int:
+    """Heuristic trip count of a while loop: the largest integer constant in
+    its condition computation (our scans compare an induction var against
+    the trip count)."""
+    best = 1
+    for line in cond_lines:
+        for m in _INT_CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_RG_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,{} ]+)\}\}")
+_RG_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](T\(([0-9,]+)\))?")
+
+
+def _crosses_pods(line: str, pod_size: int = 256) -> bool:
+    """True if any replica group mixes devices from different pods (device
+    ids [0, pod_size) vs [pod_size, ...)). Handles explicit and iota
+    replica_groups formats."""
+    m = _RG_EXPLICIT_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "")
+                   .split(",") if x.strip()]
+            if ids and (min(ids) < pod_size <= max(ids)):
+                return True
+        return False
+    m = _RG_IOTA_RE.search(line)
+    if m:
+        import numpy as np
+        ngroups, per_group = int(m.group(1)), int(m.group(2))
+        total = ngroups * per_group
+        if total <= pod_size:
+            return False
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(total).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(5).split(",")]
+            ids = ids.transpose(perm)
+        groups = ids.reshape(ngroups, per_group)
+        return bool(np.any((groups.min(1) < pod_size)
+                           & (groups.max(1) >= pod_size)))
+    return False
+
+
+def _line_operand_bytes(line: str, opname: str, sym: Dict[str, int]) -> int:
+    mo = re.search(rf"\b{opname}(?:-start)?\(", line)
+    if not mo:
+        return 0
+    args = line[mo.end() - 1:]
+    depth, end = 0, len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return sum(sym.get(name, 0) for name in _OPND_RE.findall(args[:end]))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Loop-aware sum of *operand* bytes of every collective op in the
+    per-device HLO.
+
+    Two subtleties of post-optimization HLO dumps:
+      * operand types are not inline -> resolve operand names against a
+        per-computation symbol table of result sizes;
+      * ops inside ``while`` bodies execute once per loop iteration (our
+        layer stack is a ``lax.scan``!) -> walk the computation graph from
+        ENTRY, multiplying by each loop's trip count (largest integer
+        constant in its condition — exact for scan-generated loops).
+
+    Returns both the executed totals and the static (body-once) totals.
+    """
+    comps, entry = _split_computations(hlo_text)
+    out = {k: 0 for k in _COLLECTIVES}
+    raw = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+
+    def visit(comp: str, mult: int, seen_stack=()):
+        if comp not in comps or comp in seen_stack:
+            return
+        lines = comps[comp]
+        sym: Dict[str, int] = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                sym[m.group(1)] = _parse_type_bytes(m.group(2))
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = _trip_count(comps.get(cond, []))
+                visit(body, mult * trips, seen_stack + (comp,))
+                continue
+            for op in _COLLECTIVES:
+                if f"{op}-done" in line:
+                    continue
+                if re.search(rf"\b{op}(?:-start)?\(", line):
+                    b = _line_operand_bytes(line, op, sym)
+                    out[op] += b * mult
+                    raw[op] += b
+                    out["count"] += 1
+                    if _crosses_pods(line):
+                        out["cross_pod"] = out.get("cross_pod", 0) + b * mult
+                    break
+
+    if entry:
+        visit(entry, 1)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["static_total"] = sum(raw.values())
+    out.setdefault("cross_pod", 0)
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _memory_analysis_dict(compiled) -> Dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    d = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            d[k] = int(v)
+    if not d:
+        d["repr"] = str(ma)
+    return d
+
+
+def _cost_analysis_dict(compiled) -> Dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" in k.lower()
+                or k in ("transcendentals", "optimal_seconds"))}
+
+
+def model_flops(cfg, shape: ShapeConfig) -> float:
+    """6 * N_active * D analytical training FLOPs (2ND for fwd-only decode)."""
+    pshape = SP.params_shape(cfg)
+    total = 0
+    active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pshape)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        if "ffn/w_" in ps and cfg.num_experts:
+            n = n * cfg.experts_per_token // cfg.num_experts
+        active += n
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 2.0 if shape.is_decode else 6.0
+    return mult * active * tokens, total
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               kv_dtype: Optional[str] = None,
+               remat: Optional[bool] = None,
+               fsdp_gather: bool = False,
+               remat_policy: Optional[str] = None,
+               fl_local_steps: int = 0) -> Dict:
+    cfg = get_config(arch)
+    if kv_dtype:
+        cfg = cfg.replace(kv_cache_dtype=kv_dtype)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if fsdp_gather:
+        cfg = cfg.replace(fsdp_gather_weights=True)
+    if remat_policy:
+        cfg = cfg.replace(remat_policy=remat_policy)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec: Dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "2x16x16" if multi_pod else "16x16",
+                 "kind": shape.kind, "kv_dtype": kv_dtype,
+                 "fsdp_gather": fsdp_gather}
+
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention architecture: 500k decode "
+                        "requires sub-quadratic state (DESIGN.md skip rule)")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axis_sizes = R.mesh_axis_sizes(mesh)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+
+    pshape = SP.params_shape(cfg)
+    pspecs = R.sanitize_specs(R.param_specs(cfg, pshape), pshape, axis_sizes)
+    pshard = _named(mesh, pspecs)
+
+    if fl_local_steps and shape.kind == "train" and multi_pod:
+        # the paper's I local rounds per aggregation (eq 5-8) mapped onto
+        # pods-as-cohorts: I per-pod SGD steps, then ONE cross-pod FedAvg
+        # all-reduce. Cross-pod bytes per local step drop ~I x.
+        from repro.launch.steps import make_fl_round_step
+        n_cohorts = 2
+        rstep = make_fl_round_step(cfg, local_steps=fl_local_steps,
+                                   n_cohorts=n_cohorts)
+        batch1 = SP.train_input_specs(cfg, shape)
+        batch = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (n_cohorts, fl_local_steps,
+                 s.shape[0] // n_cohorts) + s.shape[1:], s.dtype), batch1)
+        bspec1 = R.train_batch_specs(cfg, multi_pod=False)
+        bspecs = jax.tree.map(lambda s: P("pod", None, *tuple(s)), bspec1,
+                              is_leaf=lambda x: isinstance(x, P))
+        bshard = _named(mesh, bspecs)
+        pshape_c = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_cohorts,) + s.shape, s.dtype),
+            pshape)
+        pspecs_c = jax.tree.map(lambda s: P("pod", *tuple(s)), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        pshard_c = _named(mesh, pspecs_c)
+        fn = jax.jit(rstep, in_shardings=(pshard_c, bshard),
+                     out_shardings=(pshard_c, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        args = (pshape_c, batch)
+        rec["fl_local_steps"] = fl_local_steps
+    elif shape.kind in ("train", "prefill"):
+        # prefill_32k exercises the same lowered graph as a forward pass;
+        # we lower the train step for train_4k and a loss-only (fwd) step
+        # for prefill to keep the roofline terms honest.
+        train_step, opt_init = make_train_step(cfg)
+        oshape = jax.eval_shape(opt_init, pshape)
+        ospecs = OptState(P(), None, None)
+        oshard = OptState(NamedSharding(mesh, P()), None, None)
+        bspecs = R.train_batch_specs(cfg, multi_pod)
+        bshard = _named(mesh, bspecs)
+        batch = SP.train_input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            fn = jax.jit(
+                train_step,
+                in_shardings=(pshard, oshard, bshard),
+                out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1))
+            args = (pshape, oshape, batch)
+        else:
+            from repro.models.model import loss_fn
+            fn = jax.jit(
+                lambda p, b: loss_fn(cfg, p, b),
+                in_shardings=(pshard, bshard),
+                out_shardings=NamedSharding(mesh, P()))
+            args = (pshape, batch)
+    else:
+        serve_step = make_serve_step(cfg)
+        sshape = SP.decode_state_shape(cfg, shape)
+        sspecs = R.sanitize_specs(
+            R.decode_state_specs(cfg, sshape, shape.global_batch, axis_sizes),
+            sshape, axis_sizes)
+        sshard = _named(mesh, sspecs)
+        dspecs = R.decode_batch_specs(cfg, shape.global_batch, multi_pod)
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(pshard, sshard,
+                          NamedSharding(mesh, dspecs["tokens"]),
+                          NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, dspecs["tokens"]), sshard),
+            donate_argnums=(1,))
+        batch = SP.decode_input_specs(cfg, shape)
+        args = (pshape, sshape, batch["tokens"], batch["pos"])
+
+    with jax.sharding.set_mesh(mesh):
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _memory_analysis_dict(compiled)
+    cost = _cost_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    mf, n_params = model_flops(cfg, shape)
+
+    if os.environ.get("DRYRUN_TOP_BUFFERS"):
+        from collections import Counter
+        sizes = Counter()
+        for m in re.finditer(r"%[\w.\-]+ = ([a-z0-9]+)\[([0-9,]*)\]", hlo):
+            dt, dims = m.groups()
+            if dt not in _DTYPE_BYTES:
+                continue
+            sizes[f"{dt}[{dims}]"] = _tensor_bytes(dt, dims)
+        for kk, vv in sizes.most_common(12):
+            print(f"    {vv/2**30:8.2f} GiB  {kk}")
+
+    rec.update(
+        status="ok",
+        n_devices=int(n_dev),
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=mem,
+        cost=cost,
+        collectives=coll,
+        model_flops=mf,
+        n_params=int(n_params),
+        hlo_bytes=len(hlo),
+    )
+    # the two headline numbers, printed per prompt requirements
+    print(f"[{arch} x {shape_name} x {rec['mesh']}] "
+          f"compile ok in {t_compile:.1f}s; "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev; "
+          f"flops={cost.get('flops', 0):.3g}; "
+          f"collective={coll['total']/2**20:.1f} MiB/dev")
+    return rec
+
+
+def result_path(arch: str, shape_name: str, multi_pod: bool,
+                suffix: str = "") -> str:
+    mesh = "pod2" if multi_pod else "pod1"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(
+        RESULTS_DIR, f"{arch}__{shape_name}__{mesh}{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in INPUT_SHAPES] + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--remat", default=None, choices=["on", "off"])
+    ap.add_argument("--fsdp-gather", action="store_true")
+    ap.add_argument("--remat-policy", default=None,
+                    choices=["nothing", "save_block_out"])
+    ap.add_argument("--fl-local-steps", type=int, default=0,
+                    help="lower the FL round step (pods=cohorts, I local "
+                         "steps, one cross-pod FedAvg); needs --multi-pod")
+    ap.add_argument("--suffix", default="", help="result filename suffix")
+    ap.add_argument("--subprocess-per-combo", action="store_true",
+                    help="isolate each combo in a fresh process")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
+    shapes = ([s.name for s in INPUT_SHAPES]
+              if args.shape in (None, "all") else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                out = result_path(arch, shp, mp, args.suffix)
+                if args.subprocess_per_combo:
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shp,
+                           "--suffix", args.suffix]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    if args.kv_dtype:
+                        cmd += ["--kv-dtype", args.kv_dtype]
+                    if args.remat:
+                        cmd += ["--remat", args.remat]
+                    if args.fsdp_gather:
+                        cmd.append("--fsdp-gather")
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    sys.stdout.write(r.stdout)
+                    if r.returncode != 0:
+                        failures.append((arch, shp, mp, r.stderr[-2000:]))
+                    continue
+                try:
+                    rec = dryrun_one(arch, shp, mp, kv_dtype=args.kv_dtype,
+                                     remat=(None if args.remat is None
+                                            else args.remat == "on"),
+                                     fsdp_gather=args.fsdp_gather,
+                                     remat_policy=args.remat_policy,
+                                     fl_local_steps=args.fl_local_steps)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shp,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((arch, shp, mp, repr(e)))
+                    print(f"[{arch} x {shp}] FAILED: {e!r}")
+                with open(out, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} dry-run failures:")
+        for f4 in failures:
+            print("  ", f4[:3], f4[3][:200])
+        sys.exit(1)
+    print("\nall dry-runs ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as MD
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Inputs of train_step: the token batch (+ stub modality embeddings)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((B, S), jnp.int32),
+        "labels": sds((B, S), jnp.int32),
+        "mask": sds((B, S), jnp.float32),
+    }
+    if cfg.num_prefix_tokens:  # vlm: projected patch embeddings (stub)
+        batch["prefix_embeddings"] = sds(
+            (B, cfg.num_prefix_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.is_encdec:          # audio: conv/mel frame embeddings (stub)
+        batch["encoder_frames"] = sds(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """Inputs of serve_step: one token per sequence + current position."""
+    B = shape.global_batch
+    return {
+        "tokens": sds((B,), jnp.int32),
+        "pos": sds((), jnp.int32),
+    }
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: MD.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def decode_state_shape(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: MD.init_decode_state(cfg, shape.global_batch, shape.seq_len))

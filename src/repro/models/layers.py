@@ -1,0 +1,532 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Every ``init_*``
+has a matching ``spec_*`` in :mod:`repro.sharding.rules` that mirrors the
+tree with :class:`jax.sharding.PartitionSpec` leaves.
+
+Attention is implemented three ways:
+  * ``naive``   — materialize the (S, S) score matrix (small shapes, oracle),
+  * ``chunked`` — jnp flash attention: double ``lax.scan`` over query/key
+    blocks with an online softmax; O(S·block) memory, lowers on any backend.
+    This is the default for the CPU-hosted dry-run.
+  * ``pallas``  — the TPU Pallas kernel in :mod:`repro.kernels.flash_attention`
+    (validated against ``naive`` in interpret mode; selected on real TPUs).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ----------------------------------------------------------------------
+# initializers
+# ----------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(shape[-1])
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# norms
+# ----------------------------------------------------------------------
+
+def init_norm(key, d, dtype, kind: str = "rmsnorm"):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(dt)
+    ms = (x32 * x32).mean(-1, keepdims=True)
+    y = x32 * lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, dtype, kind: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {  # gelu MLP (starcoder2 / whisper style)
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        "b_down": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _gathered(w, cfg, *spec):
+    """FSDP weight-gather on use: re-constrain the weight so the 'data'
+    shard dim is gathered (weights are small; the alternative — computing
+    with a sharded contraction dim — all-reduces the much larger
+    activations). Active only when cfg.fsdp_gather_weights."""
+    if cfg is None or not getattr(cfg, "fsdp_gather_weights", False):
+        return w
+    from repro.sharding.constrain import maybe_constrain
+    return maybe_constrain(w, *spec)
+
+
+def apply_mlp(p, x, cfg=None):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ _gathered(p["w_gate"], cfg, None, "model")) \
+            * (x @ _gathered(p["w_up"], cfg, None, "model"))
+        return h @ _gathered(p["w_down"], cfg, "model", None)
+    h = jax.nn.gelu(x @ _gathered(p["w_up"], cfg, None, "model") + p["b_up"])
+    return h @ _gathered(p["w_down"], cfg, "model", None) + p["b_down"]
+
+
+# ----------------------------------------------------------------------
+# attention (GQA, causal, optional sliding window)
+# ----------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _qkv(p, x, cfg):
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ _gathered(p["wq"], cfg, None, "model") \
+        + (p["bq"] if "bq" in p else 0.0)
+    k = x @ _gathered(p["wk"], cfg, None, "model") \
+        + (p["bk"] if "bk" in p else 0.0)
+    v = x @ _gathered(p["wv"], cfg, None, "model") \
+        + (p["bv"] if "bv" in p else 0.0)
+    B, S = x.shape[0], x.shape[1]
+    return (q.reshape(B, S, h, hd), k.reshape(B, S, kv, hd),
+            v.reshape(B, S, kv, hd))
+
+
+def _expand_kv(k, num_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating groups."""
+    B, S, KV, hd = k.shape
+    rep = num_heads // KV if num_heads % KV == 0 else -(-num_heads // KV)
+    k = jnp.repeat(k, rep, axis=2)
+    return k[:, :, :num_heads]
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    q_offset: int = 0) -> jnp.ndarray:
+    """Reference attention. q:(B,Sq,H,hd) k,v:(B,Sk,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------- jnp flash attention with custom VJP -------------------
+# The naive scan-based "flash" saves every (bq, bk) probability block for
+# autodiff — i.e. the full S^2 attention matrix, defeating the point. This
+# implementation attaches a custom VJP that recomputes the blocks in the
+# backward pass (the flash-attention backward), so train-time memory is
+# O(S·hd + S) per head. Layout inside is (B, H, S, hd); batch is pinned to
+# the 'data' mesh axis and heads to 'model' via sharding constraints.
+
+def _blockify(x, blk):
+    """(B, H, S, hd) -> (n, B, H, blk, hd), padding S to a multiple."""
+    B, H, S, hd = x.shape
+    pad = (-S) % blk
+    x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n = x.shape[2] // blk
+    return x.reshape(B, H, n, blk, hd).transpose(2, 0, 1, 3, 4)
+
+
+def _unblockify(xb, S):
+    """(n, B, H, blk, hd) -> (B, H, S, hd)."""
+    n, B, H, blk, hd = xb.shape
+    return xb.transpose(1, 2, 0, 3, 4).reshape(B, H, n * blk, hd)[:, :, :S]
+
+
+def _block_mask(qi, ki, bq, bk, *, causal, window, sk, q_offset):
+    qpos = qi * bq + jnp.arange(bq)[:, None] + q_offset
+    kpos = ki * bk + jnp.arange(bk)[None, :]
+    m = kpos < sk
+    if causal:
+        m = m & (kpos <= qpos)
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m                                            # (bq, bk)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset):
+    """q,k,v: (B,H,S,hd). Returns (out (B,H,Sq,hd), lse (B,H,Sq))."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qb = _blockify(q, bq)                               # (nq,B,H,bq,hd)
+    kb = _blockify(k, bk)
+    vb = _blockify(v, bk)
+    nq, nk = qb.shape[0], kb.shape[0]
+
+    def q_step(_, inp):
+        qi, qblk = inp
+
+        def kv_step(carry, kinp):
+            m, l, acc = carry
+            ki, kblk, vblk = kinp
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32)) * scale
+            msk = _block_mask(qi, ki, bq, bk, causal=causal, window=window,
+                              sk=Sk, q_offset=q_offset)
+            s = jnp.where(msk[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, bq), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb))
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-30)), 1e30)
+        return None, (out, lse)
+
+    _, (ob, lseb) = lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = _unblockify(ob, Sq)
+    lse = lseb.transpose(1, 2, 0, 3).reshape(B, H, -1)[:, :, :Sq]
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, bq, bk,
+                    q_offset):
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), -1)
+    qb = _blockify(q, bq)
+    dob = _blockify(dout, bq)
+    kb = _blockify(k, bk)
+    vb = _blockify(v, bk)
+    nq, nk = qb.shape[0], kb.shape[0]
+    pad_q = nq * bq - Sq
+
+    def pad_row(x):  # (B,H,Sq) -> (nq,B,H,bq)
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_q)))
+        return x.reshape(B, H, nq, bq).transpose(2, 0, 1, 3)
+
+    lseb = pad_row(lse)
+    deltab = pad_row(delta)
+
+    def kv_step(dq, kinp):
+        ki, kblk, vblk = kinp
+        kf = kblk.astype(jnp.float32)
+        vf = vblk.astype(jnp.float32)
+
+        def q_step(carry, qinp):
+            dkj, dvj, dq = carry
+            qi, qblk, doblk, lse_i, del_i = qinp
+            qf = qblk.astype(jnp.float32)
+            dof = doblk.astype(jnp.float32)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * scale
+            msk = _block_mask(qi, ki, bq, bk, causal=causal, window=window,
+                              sk=Sk, q_offset=q_offset)
+            p = jnp.exp(s - lse_i[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            dvj = dvj + jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+            ds = p * (dp - del_i[..., None]) * scale
+            dkj = dkj + jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+            dq = dq.at[qi].add(jnp.einsum("bhqk,bhkd->bhqd", ds, kf))
+            return (dkj, dvj, dq), None
+
+        z = jnp.zeros((B, H, bk, hd), jnp.float32)
+        (dkj, dvj, dq), _ = lax.scan(
+            q_step, (z, z, dq), (jnp.arange(nq), qb, dob, lseb, deltab))
+        return dq, (dkj, dvj)
+
+    dq0 = jnp.zeros((nq, B, H, bq, hd), jnp.float32)
+    dq, (dkb, dvb) = lax.scan(kv_step, dq0, (jnp.arange(nk), kb, vb))
+    dqf = _unblockify(dq, Sq).astype(q.dtype)
+    dkf = _unblockify(dkb, Sk).astype(k.dtype)
+    dvf = _unblockify(dvb, Sk).astype(v.dtype)
+    return dqf, dkf, dvf
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_mha(q, k, v, causal, window, bq, bk, q_offset):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset)
+    return out
+
+
+def _flash_mha_fwd(q, k, v, causal, window, bq, bk, q_offset):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, bq, bk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_mha_bwd(causal, window, bq, bk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, bq, bk,
+                           q_offset)
+
+
+_flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      q_block: int = 512, kv_block: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Flash attention in jnp with an exact-memory custom VJP.
+
+    q, k, v: (B, S, H, hd) (kv pre-expanded to H heads). Returns same layout.
+    """
+    from repro.sharding.constrain import maybe_constrain
+    Sq, Sk = q.shape[1], k.shape[1]
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    # (B,S,H,hd) -> (B,H,S,hd), pin batch->data, heads->model
+    qt = maybe_constrain(q.transpose(0, 2, 1, 3), "data", "model", None, None)
+    kt = maybe_constrain(k.transpose(0, 2, 1, 3), "data", "model", None, None)
+    vt = maybe_constrain(v.transpose(0, 2, 1, 3), "data", "model", None, None)
+    out = _flash_mha(qt, kt, vt, causal, window, q_block, kv_block, q_offset)
+    out = maybe_constrain(out, "data", "model", None, None)
+    return out.transpose(0, 2, 1, 3)
+
+
+def attention_train(p, x, cfg, *, causal: bool = True,
+                    positions: Optional[jnp.ndarray] = None,
+                    kv_override=None):
+    """Full-sequence attention (train / prefill). kv_override supplies
+    external K/V inputs (cross-attention)."""
+    B, S, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(p, x, cfg)
+    if kv_override is not None:
+        k, v = kv_override  # already (B,Sk,KV,hd)
+    elif cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    win = cfg.sliding_window
+    if cfg.attn_impl == "naive" or S <= 1024:
+        o = naive_attention(q, k, v, causal=causal, window=win)
+    elif cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=causal, window=win)
+    else:
+        o = chunked_attention(q, k, v, causal=causal, window=win)
+    o = o.reshape(B, S, h * hd)
+    return o @ _gathered(p["wo"], cfg, "model", None)
+
+
+# ---------------- decode (single new token against a KV cache) -----------
+
+def init_kv_cache(cfg, batch, cache_len, layers_leading=()):
+    """Allocate a KV cache. Sliding-window archs use a ring buffer of
+    min(window, cache_len). Optional int8 quantized storage."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    eff = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+    shape = (*layers_leading, batch, eff, kv, hd)
+    if cfg.kv_cache_dtype == "int8":
+        c = {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros((*layers_leading, batch, eff, kv), jnp.float32),
+            "v_scale": jnp.zeros((*layers_leading, batch, eff, kv), jnp.float32),
+        }
+    else:
+        dt = jnp.dtype(cfg.kv_cache_dtype)
+        c = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    return c
+
+
+def _quantize_kv(x):
+    """(B,1,KV,hd) -> int8 values + per-(token,head) scale."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0].astype(jnp.float32)
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def update_kv_cache(cache, k_new, v_new, pos, cfg):
+    """Insert one token at position pos (ring-buffered for sliding window)."""
+    eff = cache["k"].shape[-3]
+    slot = jnp.mod(pos, eff)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        cache = {
+            "k": lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=-3),
+            "v": lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=-3),
+            "k_scale": lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, slot, axis=-2),
+            "v_scale": lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, slot, axis=-2),
+        }
+    else:
+        dt = cache["k"].dtype
+        cache = {
+            "k": lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(dt), slot, axis=-3),
+            "v": lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(dt), slot, axis=-3),
+        }
+    return cache
+
+
+def attention_decode(p, x, cache, pos, cfg, *, cross: bool = False,
+                     cross_len: Optional[jnp.ndarray] = None):
+    """One-token attention against the cache.
+
+    x: (B, 1, D). pos: scalar current position. Returns (out, new_cache).
+    For cross-attention the cache holds precomputed encoder K/V and is not
+    updated.
+    """
+    B = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"] + (p["bq"] if "bq" in p else 0.0)).reshape(B, 1, h, hd)
+    if not cross:
+        k_new = (x @ p["wk"] + (p["bk"] if "bk" in p else 0.0)).reshape(B, 1, kv, hd)
+        v_new = (x @ p["wv"] + (p["bv"] if "bv" in p else 0.0)).reshape(B, 1, kv, hd)
+        if cfg.rope_theta > 0:
+            posv = jnp.full((B, 1), pos)
+            q = apply_rope(q, posv, cfg.rope_theta)
+            k_new = apply_rope(k_new, posv, cfg.rope_theta)
+        cache = update_kv_cache(cache, k_new, v_new, pos, cfg)
+    if "k_scale" in cache:
+        kc = _dequantize_kv(cache["k"], cache["k_scale"])
+        vc = _dequantize_kv(cache["v"], cache["v_scale"])
+    else:
+        kc, vc = cache["k"], cache["v"]
+    eff = kc.shape[-3]
+    # validity of each cache slot
+    slot_idx = jnp.arange(eff)
+    if cross:
+        valid = slot_idx < (cross_len if cross_len is not None else eff)
+    elif cfg.sliding_window and cfg.sliding_window <= eff:
+        valid = slot_idx < jnp.minimum(pos + 1, eff)   # ring buffer fully valid once warm
+    else:
+        valid = slot_idx <= pos
+    kc = _expand_kv(kc, h)                              # (B, eff, H, hd)
+    vc = _expand_kv(vc, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, vc.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(B, 1, h * hd)
+    return o @ p["wo"], cache
+
+
+# ----------------------------------------------------------------------
+# losses
+# ----------------------------------------------------------------------
+
+def chunked_softmax_xent(logits_fn, x_final, w_head, labels, mask,
+                         chunk: int = 256):
+    """Cross-entropy with the vocab projection fused per sequence chunk so
+    the (B, S, V) logits tensor is never fully materialized.
+
+    x_final: (B, S, D) final hidden states; w_head: (D, V).
+    labels, mask: (B, S).
+    """
+    from repro.sharding.constrain import maybe_constrain
+    B, S, D = x_final.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    xs = jnp.pad(x_final, ((0, 0), (0, pad), (0, 0)))
+    ls = jnp.pad(labels, ((0, 0), (0, pad)))
+    ms = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = xs.shape[1] // chunk
+    xs = xs.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = ls.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = ms.reshape(B, n, chunk).transpose(1, 0, 2)
+    xs = maybe_constrain(xs, None, "data", None, None)
+
+    # checkpointed body: the (B, chunk, V) logits block is recomputed in the
+    # backward pass instead of being stacked across the scan (which would
+    # materialize the full (B, S, V) logits tensor).
+    @partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, xlm):
+        tot, cnt = carry
+        xc, lc, mc = xlm
+        logits = (xc @ w_head).astype(jnp.float32)          # (B, chunk, V)
+        logits = maybe_constrain(logits, "data", None, "model")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = lax.scan(step, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

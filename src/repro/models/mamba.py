@@ -1,0 +1,147 @@
+"""Mamba (selective SSM) mixer block — jamba's recurrent layer.
+
+Training/prefill uses a *chunked* scan: ``lax.scan`` over sequence chunks
+carrying the SSM state, with an associative scan inside each chunk. The live
+hidden-state buffer is O(B · chunk · d_inner · d_state) instead of
+O(B · S · d_inner · d_state) — this is the TPU adaptation of the CUDA
+selective-scan kernel (VMEM-sized chunks instead of SM shared-memory tiles).
+
+Decode is the exact single-step recurrence with a (conv_state, ssm_state)
+cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+from repro.sharding.constrain import maybe_constrain
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.mamba_d_inner
+    ds = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dr = cfg.dt_rank
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (dc, di), dt),       # depthwise causal conv
+        "conv_b": jnp.zeros((di,), dt),
+        "w_x_dbc": dense_init(ks[2], (di, dr + 2 * ds), dt),
+        "w_dt": dense_init(ks[3], (dr, di), dt),
+        "b_dt": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), jnp.float32),
+        "a_log": jnp.log(a),                              # (di, ds) fp32
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _ssm_params(p, x, cfg):
+    """x: (..., di) conv+silu output -> (dt, B, C) selective params."""
+    dr, ds = cfg.dt_rank, cfg.mamba_d_state
+    dbc = x @ p["w_x_dbc"]
+    dt_r, b, c = jnp.split(dbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+                         + p["b_dt"])                     # (..., di)
+    return dt, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def _causal_conv(x, w, b):
+    """x: (B, S, di); depthwise causal conv along S with kernel (dc, di)."""
+    dc = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    # sum_{j} x[t-dc+1+j] * w[j]
+    out = sum(xp[:, j:j + x.shape[1]] * w[j] for j in range(dc))
+    return out + b
+
+
+def apply_mamba(p, x, cfg, *, chunk: int = 256):
+    """Full-sequence mamba mixer. x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di)
+    xi = maybe_constrain(xi, "data", None, "model")
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, bmat, cmat = _ssm_params(p, xi, cfg)              # (B,S,di),(B,S,ds),(B,S,ds)
+    a = -jnp.exp(p["a_log"])                              # (di, ds)
+
+    # discretize: da[t] = exp(dt[t] * A) (di,ds);  db_x[t] = dt*B[t]*x[t]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    def padS(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+    xi_, dt_, b_, c_ = map(padS, (xi.astype(jnp.float32), dt, bmat, cmat))
+    n = xi_.shape[1] // chunk
+    resh = lambda t: t.reshape(B, n, chunk, *t.shape[2:]).swapaxes(0, 1)
+    xi_, dt_, b_, c_ = map(resh, (xi_, dt_, b_, c_))      # (n,B,chunk,...)
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(h, inp):
+        xc, dtc, bc, cc = inp                             # (B,chunk,di),(B,chunk,di),(B,chunk,ds)
+        da = jnp.exp(dtc[..., None] * a)                  # (B,chunk,di,ds)
+        da = maybe_constrain(da, "data", None, "model", None)
+        dbx = (dtc * xc)[..., None] * bc[..., None, :]    # (B,chunk,di,ds)
+        dbx = maybe_constrain(dbx, "data", None, "model", None)
+
+        def assoc(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        # prepend carry as the first element
+        da0 = jnp.concatenate([jnp.ones_like(da[:, :1]), da], axis=1)
+        dbx0 = jnp.concatenate([h[:, None], dbx], axis=1)
+        _, hs = lax.associative_scan(assoc, (da0, dbx0), axis=1)
+        hs = hs[:, 1:]                                     # (B,chunk,di,ds)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc)           # (B,chunk,di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = lax.scan(chunk_step, h0, (xi_, dt_, b_, c_))  # (n,B,chunk,di)
+    y = ys.swapaxes(0, 1).reshape(B, n * chunk, di)[:, :S]
+    y = y + xi.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["w_out"]
+
+
+# ---------------------------- decode ----------------------------------
+
+def init_mamba_cache(cfg, batch, layers_leading=()):
+    di, ds, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((*layers_leading, batch, dc - 1, di),
+                          jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((*layers_leading, batch, di, ds), jnp.float32),
+    }
+
+
+def decode_mamba(p, x, cache, cfg):
+    """One-token mamba step. x: (B, 1, D) -> (out, new_cache)."""
+    B = x.shape[0]
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    xz = x[:, 0] @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # (B, di)
+    # conv ring: state holds previous dc-1 inputs
+    conv_in = jnp.concatenate([cache["conv"], xi[:, None]], axis=1)  # (B,dc,di)
+    w = p["conv_w"]                                       # (dc, di)
+    xc = jnp.einsum("bcd,cd->bd", conv_in, w) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    dt, bvec, cvec = _ssm_params(p, xc, cfg)              # (B,di),(B,ds),(B,ds)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)                       # (B,di,ds)
+    h = cache["ssm"] * da + (dt * xc.astype(jnp.float32))[..., None] \
+        * bvec[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cvec)
+    y = y + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["w_out"])[:, None]
+    return out, {"conv": conv_in[:, 1:], "ssm": h}

@@ -1,0 +1,348 @@
+"""Model assembly: embeddings -> scanned block groups -> norm -> LM head.
+
+All ten assigned architectures share this spine. A config's ``cycle``
+describes one period of the (possibly heterogeneous) layer stack; parameters
+for each cycle position are stacked over ``num_groups`` and the stack is
+applied with a single ``lax.scan`` so that even the 94-layer MoE lowers with
+O(1) HLO size.
+
+Public API:
+  init_params(cfg, key)                       -> params pytree
+  forward(cfg, params, tokens, ...)           -> final hidden states (B,S,D)
+  loss_fn(cfg, params, batch)                 -> scalar LM loss
+  init_decode_state(cfg, params, batch, L)    -> decode cache pytree
+  decode_step(cfg, params, state, tok, pos)   -> (logits, new state)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+
+
+# ----------------------------------------------------------------------
+# init
+# ----------------------------------------------------------------------
+
+def _init_mixer(key, cfg: ModelConfig, kind: str):
+    if kind == "attn":
+        return L.init_attention(key, cfg)
+    if kind == "mamba":
+        return M.init_mamba(key, cfg)
+    if kind == "mlstm":
+        return X.init_mlstm(key, cfg)
+    if kind == "slstm":
+        return X.init_slstm(key, cfg)
+    raise ValueError(kind)
+
+
+def _init_block(key, cfg: ModelConfig, spec):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.dtype)
+    p = {
+        "ln1": L.init_norm(ks[0], cfg.d_model, dt, cfg.norm_kind),
+        "mixer": _init_mixer(ks[1], cfg, spec.mixer),
+    }
+    if cfg.is_encdec and spec.mixer == "attn":
+        # decoder blocks get a cross-attention sublayer
+        p["ln_cross"] = L.init_norm(ks[4], cfg.d_model, dt, cfg.norm_kind)
+        p["cross"] = L.init_attention(ks[5], cfg)
+    if spec.ffn != "none":
+        p["ln2"] = L.init_norm(ks[2], cfg.d_model, dt, cfg.norm_kind)
+        p["ffn"] = (MOE.init_moe(ks[3], cfg) if spec.ffn == "moe"
+                    else L.init_mlp(ks[3], cfg.d_model, cfg.d_ff, dt,
+                                    cfg.mlp_kind))
+    return p
+
+
+def _init_block_stack(key, cfg: ModelConfig, *, encoder: bool = False):
+    """One stacked-param tuple, leading dim = num_groups (encoder: layers)."""
+    if encoder:
+        n, cycle = cfg.encoder_layers, (type(cfg.cycle[0])("attn", "mlp"),)
+    else:
+        n, cycle = cfg.num_groups, cfg.cycle
+    blocks = []
+    enc_cfg = cfg.replace(sliding_window=0) if encoder else cfg
+    for pos, spec in enumerate(cycle):
+        keys = jax.random.split(jax.random.fold_in(key, pos), n)
+        init_one = partial(_init_block, cfg=enc_cfg, spec=spec)
+        blocks.append(jax.vmap(lambda k: init_one(k))(keys))
+    return tuple(blocks)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    params = {
+        "tok_embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "blocks": _init_block_stack(ks[1], cfg),
+        "final_norm": L.init_norm(ks[2], cfg.d_model, dt, cfg.norm_kind),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.learned_pos:  # learned positions (whisper-style decoder)
+        params["pos_embed"] = L.embed_init(ks[4], (32_768, cfg.d_model), dt)
+    if cfg.is_encdec:
+        params["enc"] = {
+            "pos_embed": L.embed_init(ks[5], (cfg.encoder_seq, cfg.d_model), dt),
+            "blocks": _init_block_stack(ks[6], cfg, encoder=True),
+            "final_norm": L.init_norm(ks[7], cfg.d_model, dt, cfg.norm_kind),
+        }
+    return params
+
+
+def lm_head_weight(cfg, params):
+    return (params["tok_embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+
+
+# ----------------------------------------------------------------------
+# forward (train / prefill)
+# ----------------------------------------------------------------------
+
+def _checkpoint_tag(cfg, t):
+    """Mark a block output as savable under the save_block_out remat policy
+    (saved seq-sharded so the checkpoint costs B x S/16 x D per block)."""
+    if cfg.remat_policy != "save_block_out":
+        return t
+    from jax.ad_checkpoint import checkpoint_name
+
+    from repro.sharding.constrain import maybe_constrain
+    t = maybe_constrain(t, ("pod", "data"),
+                        "model" if t.shape[1] % 16 == 0 else None, None)
+    return checkpoint_name(t, "block_out")
+
+
+def _apply_block(bp, x, cfg: ModelConfig, spec, *, causal: bool,
+                 enc_out=None, aux=None):
+    h = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "attn":
+        mixed = L.attention_train(bp["mixer"], h, cfg, causal=causal)
+    elif spec.mixer == "mamba":
+        mixed = M.apply_mamba(bp["mixer"], h, cfg)
+    elif spec.mixer == "mlstm":
+        mixed = X.apply_mlstm(bp["mixer"], h, cfg)
+    else:
+        mixed = X.apply_slstm(bp["mixer"], h, cfg)
+    x = x + _checkpoint_tag(cfg, mixed)
+    if "cross" in bp and enc_out is not None:
+        h = L.apply_norm(bp["ln_cross"], x, cfg.norm_eps)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        Bc, Sc = enc_out.shape[0], enc_out.shape[1]
+        k = (enc_out @ bp["cross"]["wk"]
+             + (bp["cross"].get("bk", 0.0))).reshape(Bc, Sc, kv, hd)
+        v = (enc_out @ bp["cross"]["wv"]
+             + (bp["cross"].get("bv", 0.0))).reshape(Bc, Sc, kv, hd)
+        x = x + L.attention_train(bp["cross"], h, cfg, causal=False,
+                                  kv_override=(k, v))
+    if spec.ffn != "none":
+        h = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            y, moe_aux = MOE.apply_moe(bp["ffn"], h, cfg)
+            if aux is not None:
+                aux["moe_aux_loss"] = aux.get("moe_aux_loss", 0.0) \
+                    + moe_aux["moe_aux_loss"]
+        else:
+            y = L.apply_mlp(bp["ffn"], h, cfg)
+        x = x + _checkpoint_tag(cfg, y)
+    return x
+
+
+def _run_stack(blocks, x, cfg: ModelConfig, cycle, *, causal: bool,
+               enc_out=None):
+    """Scan the grouped stack. Returns (x, total_moe_aux)."""
+
+    from repro.sharding.constrain import maybe_constrain
+
+    def one_block(bp, x, pos):
+        aux = {}
+        x = _apply_block(bp, x, cfg, cycle[pos], causal=causal,
+                         enc_out=enc_out, aux=aux)
+        return x, aux.get("moe_aux_loss", jnp.float32(0.0))
+
+    pol = None
+    if cfg.remat_policy == "save_block_out":
+        pol = jax.checkpoint_policies.save_only_these_names("block_out")
+    if cfg.remat:
+        # nested remat: the scan body is checkpointed (saves only the per-
+        # group residual-stream carry) AND each block inside is checkpointed,
+        # so the backward pass holds ONE block's intermediates at a time
+        # instead of a whole group's.
+        one_block = jax.checkpoint(one_block, prevent_cse=False,
+                                   static_argnums=(2,), policy=pol)
+
+    # sequence-parallel activation carries (Megatron-SP analogue): the
+    # residual stream saved at each scan step for the backward pass is
+    # sharded (batch -> data, seq -> model); blocks re-gather the sequence
+    # internally. Without this the per-layer activation checkpoints alone
+    # exceed HBM on the 94-layer configs (see EXPERIMENTS.md §Perf).
+    seq_ok = x.shape[1] % 16 == 0
+
+    def group_body(carry, group_params):
+        x, aux_sum = carry
+        x = maybe_constrain(x, ("pod", "data"), "model" if seq_ok else None,
+                            None)
+        for pos in range(len(cycle)):
+            x, aux = one_block(group_params[pos], x, pos)
+            aux_sum = aux_sum + aux
+        return (x, aux_sum), None
+
+    body = group_body
+    if cfg.remat:
+        body = jax.checkpoint(group_body, prevent_cse=True, policy=pol)
+    (x, aux_sum), _ = lax.scan(body, (x, jnp.float32(0.0)), blocks)
+    return x, aux_sum
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, Senc, D)."""
+    enc = params["enc"]
+    x = frames + enc["pos_embed"][None, : frames.shape[1]]
+    enc_cfg = cfg.replace(sliding_window=0)
+    cycle = (type(cfg.cycle[0])("attn", "mlp"),)
+    x, _ = _run_stack(enc["blocks"], x, enc_cfg, cycle, causal=False)
+    return L.apply_norm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, *, prefix_embeddings=None,
+            encoder_frames=None):
+    """Returns (final_hidden (B,S,D), moe_aux_loss scalar)."""
+    x = params["tok_embed"][tokens]
+    if prefix_embeddings is not None:
+        P = prefix_embeddings.shape[1]
+        x = jnp.concatenate(
+            [prefix_embeddings.astype(x.dtype), x[:, P:]], axis=1)
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][None, : x.shape[1]]
+    enc_out = None
+    if cfg.is_encdec:
+        assert encoder_frames is not None
+        enc_out = encode(cfg, params, encoder_frames)
+    x, aux = _run_stack(params["blocks"], x, cfg, cfg.cycle, causal=True,
+                        enc_out=enc_out)
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01):
+    """batch: dict(tokens, labels, mask[, prefix_embeddings, encoder_frames])."""
+    x, aux = forward(cfg, params, batch["tokens"],
+                     prefix_embeddings=batch.get("prefix_embeddings"),
+                     encoder_frames=batch.get("encoder_frames"))
+    w = lm_head_weight(cfg, params)
+    nll = L.chunked_softmax_xent(None, x, w, batch["labels"], batch["mask"])
+    return nll + aux_weight * aux
+
+
+def logits_fn(cfg: ModelConfig, params, tokens, **kw):
+    x, _ = forward(cfg, params, tokens, **kw)
+    return x @ lm_head_weight(cfg, params)
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+def _init_mixer_cache(cfg: ModelConfig, kind: str, batch, cache_len, n):
+    lead = (n,)
+    if kind == "attn":
+        return L.init_kv_cache(cfg, batch, cache_len, lead)
+    if kind == "mamba":
+        return M.init_mamba_cache(cfg, batch, lead)
+    if kind == "mlstm":
+        return X.init_mlstm_cache(cfg, batch, lead)
+    return X.init_slstm_cache(cfg, batch, lead)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int):
+    """Self-attention / recurrent caches, stacked per cycle position."""
+    n = cfg.num_groups
+    state = {"self": tuple(
+        _init_mixer_cache(cfg, spec.mixer, batch, cache_len, n)
+        for spec in cfg.cycle)}
+    if cfg.is_encdec:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        state["cross"] = {
+            "k": jnp.zeros((n, batch, cfg.encoder_seq, kv, hd),
+                           jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros((n, batch, cfg.encoder_seq, kv, hd),
+                           jnp.dtype(cfg.dtype)),
+        }
+    return state
+
+
+def build_cross_cache(cfg: ModelConfig, params, enc_out):
+    """Precompute cross-attention K/V from encoder output (whisper prefill)."""
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    B, S, _ = enc_out.shape
+
+    def per_group(bp):
+        c = bp["cross"]
+        k = (enc_out @ c["wk"] + c.get("bk", 0.0)).reshape(B, S, kv, hd)
+        v = (enc_out @ c["wv"] + c.get("bv", 0.0)).reshape(B, S, kv, hd)
+        return k, v
+
+    ks, vs = jax.vmap(per_group)(params["blocks"][0])
+    return {"k": ks, "v": vs}
+
+
+def decode_step(cfg: ModelConfig, params, state, tokens, pos):
+    """One greedy decode step.
+
+    tokens: (B,) current token ids; pos: scalar position (int32).
+    Returns (logits (B, V), new_state).
+    """
+    x = params["tok_embed"][tokens][:, None]              # (B,1,D)
+    if cfg.learned_pos:
+        x = x + lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0)[None]
+
+    def group_body(x, scanned):
+        group_params, group_cache, group_cross = scanned
+        new_caches = []
+        for p_idx, spec in enumerate(cfg.cycle):
+            bp = group_params[p_idx]
+            cache = group_cache[p_idx]
+            h = L.apply_norm(bp["ln1"], x, cfg.norm_eps)
+            if spec.mixer == "attn":
+                mixed, cache = L.attention_decode(bp["mixer"], h, cache,
+                                                  pos, cfg)
+            elif spec.mixer == "mamba":
+                mixed, cache = M.decode_mamba(bp["mixer"], h, cache, cfg)
+            elif spec.mixer == "mlstm":
+                mixed, cache = X.decode_mlstm(bp["mixer"], h, cache, cfg)
+            else:
+                mixed, cache = X.decode_slstm(bp["mixer"], h, cache, cfg)
+            x = x + mixed
+            if "cross" in bp and group_cross is not None:
+                h = L.apply_norm(bp["ln_cross"], x, cfg.norm_eps)
+                o, _ = L.attention_decode(
+                    bp["cross"], h, group_cross, pos, cfg, cross=True)
+                x = x + o
+            if spec.ffn != "none":
+                h = L.apply_norm(bp["ln2"], x, cfg.norm_eps)
+                if spec.ffn == "moe":
+                    y, _ = MOE.apply_moe(bp["ffn"], h, cfg)
+                else:
+                    y = L.apply_mlp(bp["ffn"], h)
+                x = x + y
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    cross = state.get("cross")
+    x, new_self = lax.scan(group_body, x,
+                           (params["blocks"], state["self"], cross))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ lm_head_weight(cfg, params)).astype(jnp.float32)
+    new_state = dict(state)
+    new_state["self"] = new_self
+    return logits, new_state

@@ -1,0 +1,251 @@
+"""xLSTM mixers: mLSTM (matrix memory, parallel/chunkwise) and sLSTM
+(scalar memory, strictly sequential) [arXiv:2405.04517].
+
+TPU adaptation: the CUDA sLSTM kernel exploits register-resident recurrence;
+on TPU we express it as a ``lax.scan`` over time (the XLA while-loop keeps
+state in VMEM/VREGs). The mLSTM parallel form is *chunkwise*: a scan over
+sequence chunks carrying the (C, n, m) matrix-memory state with a quadratic
+intra-chunk part — the same blocking idea as flash attention, sized for VMEM.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init
+from repro.sharding.constrain import maybe_constrain
+
+
+# ----------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.xlstm_num_heads
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wq": dense_init(ks[0], (d, d), dt),
+        "wk": dense_init(ks[1], (d, d), dt),
+        "wv": dense_init(ks[2], (d, d), dt),
+        "wz": dense_init(ks[3], (d, d), dt),       # output-gating branch
+        "wo": dense_init(ks[4], (d, d), dt),
+        "wi": dense_init(ks[5], (d, h), jnp.float32),
+        "wf": dense_init(ks[6], (d, h), jnp.float32),
+        "bi": jnp.zeros((h,), jnp.float32),
+        "bf": jnp.full((h,), 3.0, jnp.float32),    # open forget gates at init
+    }
+
+
+def _mlstm_qkv(p, x, h):
+    B, S, d = x.shape
+    dh = d // h
+    q = (x @ p["wq"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, h, dh).transpose(0, 2, 1, 3)
+    li = (x.astype(jnp.float32) @ p["wi"] + p["bi"]).transpose(0, 2, 1)  # (B,h,S)
+    lf = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ p["wf"] + p["bf"]).transpose(0, 2, 1)
+    return q, k, v, li, lf
+
+
+def apply_mlstm(p, x, cfg, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM. x: (B, S, D) -> (B, S, D)."""
+    B, S, d = x.shape
+    h = cfg.xlstm_num_heads
+    dh = d // h
+    q, k, v, li, lf = _mlstm_qkv(p, x, h)          # q:(B,h,S,dh)
+    # xLSTM has few, wide heads (4 x 512): sharding heads over the 16-way
+    # model axis pads 4 -> 16 (4x waste + permute churn); shard head_dim.
+    q = maybe_constrain(q, "data", None, None, "model")
+    k = maybe_constrain(k, "data", None, None, "model")
+    v = maybe_constrain(v, "data", None, None, "model")
+    scale = 1.0 / math.sqrt(dh)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    def padt(t, fill=0.0):
+        cfgp = [(0, 0)] * t.ndim
+        cfgp[2] = (0, pad)
+        return jnp.pad(t, cfgp, constant_values=fill)
+    q, k, v = padt(q), padt(k), padt(v)
+    li, lf = padt(li, -1e30), padt(lf)             # padded i-gate = -inf (no write)
+    n_chunks = q.shape[2] // chunk
+    resh = lambda t: t.reshape(B, h, n_chunks, chunk, *t.shape[3:]).transpose(
+        2, 0, 1, 3, *range(4, t.ndim + 1))
+    qc, kc, vc, lic, lfc = map(resh, (q, k, v, li, lf))  # (n,B,h,chunk[,dh])
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, inp):
+        C, n, m = carry                             # (B,h,dk,dv),(B,h,dk),(B,h)
+        qq, kk, vv, ii, ff = inp
+        F = jnp.cumsum(ff, axis=-1)                 # inclusive logcum decay
+        Ftot = F[..., -1]
+        # log-weight of source s seen from query t: F[t]-F[s]+ff[s]... note
+        # state written at s decays by F[t]-F[s]; write gain = ii[s].
+        ldecay = F[..., :, None] - F[..., None, :] + ii[..., None, :]
+        ldecay = jnp.where(tri, ldecay, -1e30)      # causal, s<=t
+        linter = F + m[..., None]                   # decay of carried state
+        m_t = jnp.maximum(linter, ldecay.max(-1))   # (B,h,chunk)
+        wintra = jnp.exp(ldecay - m_t[..., None])   # (B,h,chunk,chunk)
+        winter = jnp.exp(linter - m_t)              # (B,h,chunk)
+
+        qf = qq.astype(jnp.float32) * scale
+        kf, vf = kk.astype(jnp.float32), vv.astype(jnp.float32)
+        s_qk = jnp.einsum("bhtd,bhsd->bhts", qf, kf) * wintra
+        num = jnp.einsum("bhts,bhsv->bhtv", s_qk, vf) \
+            + jnp.einsum("bhtd,bhdv->bhtv", qf, C) * winter[..., None]
+        nvec = jnp.einsum("bhts,bhsd->bhtd", wintra, kf) \
+            + n[..., None, :] * winter[..., None]
+        den = jnp.abs(jnp.einsum("bhtd,bhtd->bht", qf, nvec))
+        out = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+
+        # ---- state update to end of chunk ----
+        m_new = jnp.maximum(Ftot + m, (Ftot[..., None] - F + ii).max(-1))
+        wstate = jnp.exp(Ftot[..., None] - F + ii - m_new[..., None])
+        C_new = C * jnp.exp(Ftot + m - m_new)[..., None, None] \
+            + jnp.einsum("bhs,bhsd,bhsv->bhdv", wstate, kf, vf)
+        n_new = n * jnp.exp(Ftot + m - m_new)[..., None] \
+            + jnp.einsum("bhs,bhsd->bhd", wstate, kf)
+        return (C_new, n_new, m_new), out
+
+    C0 = jnp.zeros((B, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, h, dh), jnp.float32)
+    m0 = jnp.zeros((B, h), jnp.float32)
+    _, outs = lax.scan(step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, h, n_chunks * chunk, dh)
+    out = out[:, :, :S].transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+    out = out * jax.nn.silu(x @ p["wz"])
+    return out @ p["wo"]
+
+
+def init_mlstm_cache(cfg, batch, layers_leading=()):
+    d, h = cfg.d_model, cfg.xlstm_num_heads
+    dh = d // h
+    return {
+        "C": jnp.zeros((*layers_leading, batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((*layers_leading, batch, h, dh), jnp.float32),
+        "m": jnp.zeros((*layers_leading, batch, h), jnp.float32),
+    }
+
+
+def decode_mlstm(p, x, cache, cfg):
+    """One-token mLSTM step. x: (B,1,D)."""
+    B, _, d = x.shape
+    h = cfg.xlstm_num_heads
+    dh = d // h
+    q, k, v, li, lf = _mlstm_qkv(p, x, h)          # (B,h,1,dh), (B,h,1)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]
+    li, lf = li[..., 0], lf[..., 0]                # (B,h)
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(lf + m, li)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C_new = C * fw[..., None, None] + iw[..., None, None] \
+        * kf[..., :, None] * vf[..., None, :]
+    n_new = n * fw[..., None] + iw[..., None] * kf
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    out = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    out = out.reshape(B, 1, d).astype(x.dtype)
+    out = out * jax.nn.silu(x @ p["wz"])
+    return out @ p["wo"], {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ----------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.xlstm_num_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 9)
+    p = {"wo_proj": dense_init(ks[8], (d, d), dt)}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w{g}"] = dense_init(ks[i], (d, d), dt)
+        # per-head block-diagonal recurrent matrix
+        p[f"r{g}"] = dense_init(ks[4 + i], (h, dh, dh), jnp.float32,
+                                scale=0.5)
+        p[f"b{g}"] = (jnp.full((d,), 3.0, jnp.float32) if g == "f"
+                      else jnp.zeros((d,), jnp.float32))
+    return p
+
+
+def _slstm_cell(p, xg, state, h_heads):
+    """One time step. xg: dict of (B, d) pre-activations from W x."""
+    c, n, hprev, m = state                          # (B,H,dh) x3, (B,H,dh)
+    def rec(g):
+        return jnp.einsum("bhe,hed->bhd", hprev, p[f"r{g}"])
+    zt = jnp.tanh(xg["z"] + rec("z"))
+    it = xg["i"] + rec("i")
+    ft = xg["f"] + rec("f")
+    ot = jax.nn.sigmoid(xg["o"] + rec("o"))
+    m_new = jnp.maximum(ft + m, it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(ft + m - m_new)
+    c_new = fw * c + iw * zt
+    n_new = fw * n + iw
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_pre(p, x, h):
+    """Input pre-activations for all gates: (B,S,H,dh) each."""
+    B, S, d = x.shape
+    dh = d // h
+    out = {}
+    for g in ("z", "i", "f", "o"):
+        out[g] = (x.astype(jnp.float32) @ p[f"w{g}"].astype(jnp.float32)
+                  + p[f"b{g}"]).reshape(B, S, h, dh)
+    return out
+
+
+def apply_slstm(p, x, cfg):
+    """Sequential sLSTM over the full sequence. x: (B,S,D)."""
+    B, S, d = x.shape
+    h = cfg.xlstm_num_heads
+    dh = d // h
+    pre = _slstm_pre(p, x, h)
+    xs = {g: pre[g].transpose(1, 0, 2, 3) for g in pre}   # (S,B,H,dh)
+    z0 = jnp.zeros((B, h, dh), jnp.float32)
+    state0 = (z0, z0, z0, z0)
+
+    def step(state, xg):
+        return _slstm_cell(p, xg, state, h)
+
+    _, hs = lax.scan(step, state0, xs)                    # (S,B,H,dh)
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return out @ p["wo_proj"]
+
+
+def init_slstm_cache(cfg, batch, layers_leading=()):
+    d, h = cfg.d_model, cfg.xlstm_num_heads
+    dh = d // h
+
+    def z():  # distinct buffers — aliasing breaks argument donation
+        return jnp.zeros((*layers_leading, batch, h, dh), jnp.float32)
+
+    return {"c": z(), "n": z(), "h": z(), "m": z()}
+
+
+def decode_slstm(p, x, cache, cfg):
+    B, _, d = x.shape
+    h = cfg.xlstm_num_heads
+    pre = _slstm_pre(p, x, h)
+    xg = {g: pre[g][:, 0] for g in pre}
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    (c, n, hh, m), hnew = _slstm_cell(p, xg, state, h)
+    out = hnew.reshape(B, 1, d).astype(x.dtype) @ p["wo_proj"]
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (  # noqa: F401
+    adamw, apply_updates, fedprox_grad, sgd, OptState)

@@ -1,0 +1,88 @@
+"""Minimal optimizer library (no optax offline): SGD(+momentum), AdamW,
+and the FedProx proximal-gradient wrapper.
+
+All optimizers are (init, update) pairs over pytrees; state mirrors the
+parameter tree so the sharding rules apply unchanged (opt_state_specs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any          # first moment / momentum (pytree or None)
+    nu: Any          # second moment (pytree or None)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ----------------------------------------------------------------------
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0):
+    def init(params) -> OptState:
+        mu = _zeros_like_f32(params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        if weight_decay:
+            grads = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype),
+                grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state.mu, grads)
+            upd = jax.tree.map(lambda m: -lr * m, mu)
+        else:
+            mu = None
+            upd = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return upd, OptState(state.step + 1, mu, None)
+
+    return init, update
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params) -> OptState:
+        return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                        _zeros_like_f32(params))
+
+    def update(grads, state: OptState, params) -> Tuple[Any, OptState]:
+        step = state.step + 1
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v, p: -lr * ((m / c1) / (jnp.sqrt(v / c2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            mu, nu, params)
+        return upd, OptState(step, mu, nu)
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+# ----------------------------------------------------------------------
+
+def fedprox_grad(grads, params, global_params, mu: float):
+    """FedProx [24]: local objective f_k(w) + mu/2 ||w - w_t||^2 — add
+    mu (w - w_t) to the local gradient."""
+    return jax.tree.map(
+        lambda g, p, w: g + mu * (p.astype(jnp.float32)
+                                  - w.astype(jnp.float32)).astype(g.dtype),
+        grads, params, global_params)

@@ -1,0 +1,141 @@
+"""Property tests (hypothesis) for the auction mechanism — Theorem 2's Nash
+bid, the cost function, winner selection and reward models."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import FLConfig
+from repro.core import auction as A
+from repro.core import energy as E
+
+CFG = FLConfig()
+
+finite_cost = st.floats(0.0, 1.0)
+nj_kj = st.tuples(st.integers(2, 50), st.integers(1, 10)).filter(
+    lambda t: t[1] < t[0])
+
+
+@given(c=finite_cost, njkj=nj_kj)
+@settings(max_examples=200, deadline=None)
+def test_optimal_bid_bounds(c, njkj):
+    """b* in [c, 1] for c in [0,1]: the Nash bid never bids below cost and
+    never above the max valuation 1."""
+    nj, kj = njkj
+    b = float(A.optimal_bid(jnp.float32(c), nj, kj))
+    assert b >= c - 1e-6
+    assert b <= 1.0 + 1e-6
+
+
+@given(c1=finite_cost, c2=finite_cost, njkj=nj_kj)
+@settings(max_examples=200, deadline=None)
+def test_optimal_bid_monotone_in_cost(c1, c2, njkj):
+    """The equilibrium bid strategy is strictly increasing in cost
+    (condition ii of the auction model)."""
+    nj, kj = njkj
+    b1 = float(A.optimal_bid(jnp.float32(c1), nj, kj))
+    b2 = float(A.optimal_bid(jnp.float32(c2), nj, kj))
+    if c1 < c2:
+        assert b1 <= b2 + 1e-7
+
+
+@given(c=finite_cost, njkj=nj_kj)
+@settings(max_examples=100, deadline=None)
+def test_equilibrium_revenue_nonnegative(c, njkj):
+    """U_i = b - c >= 0 at the Nash bid (rationality)."""
+    nj, kj = njkj
+    b = A.optimal_bid(jnp.float32(c), nj, kj)
+    u = float(A.revenue(b, jnp.float32(c), jnp.bool_(True)))
+    assert u >= -1e-6
+
+
+@given(njkj=nj_kj)
+@settings(max_examples=50, deadline=None)
+def test_more_competition_lowers_bids(njkj):
+    """As N_j grows with K_j fixed, the bid premium 1/(N_j-K_j+1) shrinks:
+    more bidders -> more competitive bids."""
+    nj, kj = njkj
+    c = jnp.float32(0.4)
+    b_small = float(A.optimal_bid(c, nj, kj))
+    b_big = float(A.optimal_bid(c, nj + 10, kj))
+    assert b_big <= b_small + 1e-7
+
+
+@given(res=st.floats(1.0, 100.0), res2=st.floats(1.0, 100.0),
+       size=st.integers(10, 1200))
+@settings(max_examples=100, deadline=None)
+def test_resource_cost_monotone_in_residual(res, res2, size):
+    """Cr rises as the battery drains (eq 12)."""
+    e_cp = E.compute_cost_energy(jnp.int32(size), CFG)
+    c1 = float(A.resource_cost(jnp.float32(res), e_cp, CFG))
+    c2 = float(A.resource_cost(jnp.float32(res2), e_cp, CFG))
+    if res < res2 and c1 < A.INF and c2 < A.INF:
+        assert c1 >= c2 - 1e-9
+
+
+def test_resource_cost_infinite_when_depleted():
+    e_cp = E.compute_cost_energy(jnp.int32(600), CFG)  # 1.2%
+    assert float(A.resource_cost(jnp.float32(1.0), e_cp, CFG)) >= 1e8
+    assert float(A.resource_cost(jnp.float32(50.0), e_cp, CFG)) < 1.0
+
+
+@given(ns1=st.integers(1, 1200), ns2=st.integers(1, 1200),
+       co=st.integers(0, 100))
+@settings(max_examples=100, deadline=None)
+def test_service_cost_decreases_with_samples(ns1, ns2, co):
+    """Clients with more samples have lower service cost (eq 13)."""
+    c1 = float(A.service_cost(jnp.int32(ns1), jnp.int32(co), CFG))
+    c2 = float(A.service_cost(jnp.int32(ns2), jnp.int32(co), CFG))
+    if ns1 < ns2:
+        assert c1 >= c2 - 1e-9
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(5, 60), k=st.integers(1, 5))
+@settings(max_examples=50, deadline=None)
+def test_winners_are_lowest_bids(seed, n, k):
+    rng = np.random.default_rng(seed)
+    bids = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    eligible = jnp.asarray(rng.uniform(0, 1, n) > 0.3)
+    win = A.select_lowest_bids(bids, eligible, k)
+    w = np.asarray(win)
+    el = np.asarray(eligible)
+    assert w.sum() <= k
+    assert not np.any(w & ~el)
+    if w.any() and (el & ~w).any():
+        assert np.asarray(bids)[w].max() <= np.asarray(bids)[el & ~w].min() + 1e-6
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_cluster_winners_per_cluster_cap(seed):
+    rng = np.random.default_rng(seed)
+    n, j, kj = 60, 5, 2
+    bids = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    clusters = jnp.asarray(rng.integers(0, j, n), jnp.int32)
+    eligible = jnp.ones((n,), bool)
+    win = np.asarray(A.cluster_winners(bids, clusters, eligible, kj, j))
+    cl = np.asarray(clusters)
+    for c in range(j):
+        assert win[cl == c].sum() <= kj
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_reward_conservation(seed):
+    """eq 15: winners' rewards sum to exactly Rg/Nr; eq 16: client + server
+    shares never exceed Rg/Nr per winner."""
+    rng = np.random.default_rng(seed)
+    n = 40
+    won = jnp.asarray(rng.uniform(0, 1, n) > 0.7)
+    sizes = jnp.asarray(rng.integers(100, 1200, n), jnp.int32)
+    bids = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    per_round = CFG.total_reward / CFG.target_rounds
+    r15 = A.reward_sample_share(won, sizes, CFG)
+    if bool(won.any()):
+        np.testing.assert_allclose(float(r15.sum()), per_round, rtol=1e-5)
+    assert not np.any(np.asarray(r15)[~np.asarray(won)] > 0)
+    r16, server = A.reward_bid_share(won, bids, CFG)
+    assert np.all(np.asarray(r16) <= per_round + 1e-6)
+    assert not np.any(np.asarray(r16)[~np.asarray(won)] > 0)

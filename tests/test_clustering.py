@@ -1,0 +1,91 @@
+"""Clustering tests: sample window, gradient features, k-means behaviour,
+and the paper's core claim that gradient clustering groups clients by local
+distribution under imbalance."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import FLConfig
+from repro.core import clustering as CL
+
+
+def test_window_indices_bounds():
+    idx = CL.window_indices(jax.random.PRNGKey(0), 17, 50)
+    assert idx.shape == (50,)
+    assert int(idx.min()) >= 0 and int(idx.max()) < 17
+
+
+@given(k=st.integers(2, 6), n_per=st.integers(10, 30),
+       sep=st.floats(5.0, 20.0))
+@settings(max_examples=15, deadline=None)
+def test_kmeans_separated_blobs(k, n_per, sep):
+    rng = np.random.default_rng(int(sep * 10) + k)
+    centers = rng.normal(size=(k, 8)) * sep
+    pts = np.concatenate([c + 0.1 * rng.normal(size=(n_per, 8))
+                          for c in centers])
+    labels, cent = CL.kmeans(jnp.asarray(pts, jnp.float32), k,
+                             jax.random.PRNGKey(0))
+    lab = np.asarray(labels).reshape(k, n_per)
+    # every blob lands in exactly one cluster
+    for g in range(k):
+        assert len(np.unique(lab[g])) == 1
+    assert len(np.unique(lab[:, 0])) == k
+
+
+def test_kmeans_labels_in_range():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(40, 4)),
+                    jnp.float32)
+    labels, cent = CL.kmeans(x, 5, jax.random.PRNGKey(1))
+    assert labels.shape == (40,)
+    assert int(labels.min()) >= 0 and int(labels.max()) < 5
+    assert cent.shape == (5, 4)
+
+
+def test_gradient_clustering_groups_clients_by_label():
+    """The paper's §III-C claim: with the sample window, gradient features
+    of same-label clients cluster together even when local sizes differ by
+    an order of magnitude."""
+    from repro.core.adapters import cnn_adapter
+    from repro.data.synthetic import make_image_dataset
+
+    train, _ = make_image_dataset("mnist", n_train=2000, n_test=100)
+    cfg = FLConfig(num_clients=12, num_clusters=4, sample_window=30,
+                   cluster_resamples=3, num_classes=10)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    # 12 clients over 4 labels, sizes 40..400 (heavy imbalance)
+    data = []
+    true = []
+    for i in range(12):
+        lab = i % 4
+        size = int(rng.integers(40, 400))
+        idx = rng.choice(np.nonzero(train.y == lab)[0], size)
+        data.append((train.x[idx], train.y[idx]))
+        true.append(lab)
+
+    labels, cent, feats = CL.cluster_clients(
+        adapter.grad, params, data, cfg, jax.random.PRNGKey(1))
+    lab = np.asarray(labels)
+    # same-label clients must share a cluster; different labels must not.
+    for a in range(12):
+        for b in range(12):
+            if true[a] == true[b]:
+                assert lab[a] == lab[b], (a, b, lab)
+            else:
+                assert lab[a] != lab[b], (a, b, lab)
+
+
+def test_random_projection_preserves_separation():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(20, 2000)) + 5
+    b = rng.normal(size=(20, 2000)) - 5
+    proj = CL.random_projection(jax.random.PRNGKey(0), 2000, 64)
+    ap, bp = jnp.asarray(a) @ proj, jnp.asarray(b) @ proj
+    da = float(jnp.linalg.norm(ap.mean(0) - bp.mean(0)))
+    within = float(jnp.std(ap)) + float(jnp.std(bp))
+    assert da > within          # classes remain separated after projection

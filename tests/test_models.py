@@ -1,0 +1,187 @@
+"""Per-architecture smoke tests (REDUCED configs, CPU): one forward + one
+train step, asserting output shapes and no NaNs; decode-path consistency.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.models import model as MD
+from repro.optim import apply_updates, sgd
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch_for(cfg, B=2, S=32):
+    b = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                     cfg.vocab_size),
+        "mask": jnp.ones((B, S), jnp.float32),
+    }
+    if cfg.num_prefix_tokens:
+        b["prefix_embeddings"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.num_prefix_tokens, cfg.d_model))
+    if cfg.is_encdec:
+        b["encoder_frames"] = jax.random.normal(
+            jax.random.PRNGKey(4), (B, cfg.encoder_seq, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    params = MD.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+    logits = MD.logits_fn(cfg, params, batch["tokens"],
+                          prefix_embeddings=batch.get("prefix_embeddings"),
+                          encoder_frames=batch.get("encoder_frames"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = MD.init_params(cfg, KEY)
+    batch = _batch_for(cfg)
+    loss0, grads = jax.value_and_grad(
+        lambda p: MD.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss0))
+    for leaf in jax.tree.leaves(grads):
+        assert not bool(jnp.isnan(leaf).any())
+    init, upd = sgd(0.1)
+    u, _ = upd(grads, init(params), params)
+    params2 = apply_updates(params, u)
+    loss1 = float(MD.loss_fn(cfg, params2, batch))
+    assert np.isfinite(loss1)
+    assert loss1 < float(loss0)      # one SGD step reduces the batch loss
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = MD.init_params(cfg, KEY)
+    B, CL = 2, 16
+    state = MD.init_decode_state(cfg, B, CL)
+    if cfg.is_encdec:
+        frames = jax.random.normal(
+            jax.random.PRNGKey(4), (B, cfg.encoder_seq, cfg.d_model))
+        state["cross"] = MD.build_cross_cache(
+            cfg, params, MD.encode(cfg, params, frames))
+    tok = jnp.zeros((B,), jnp.int32)
+    for t in range(3):
+        logits, state = MD.decode_step(cfg, params, state, tok,
+                                       jnp.int32(t))
+        tok = logits.argmax(-1).astype(jnp.int32)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", [
+    "starcoder2-3b", "qwen2-0.5b", "jamba-v0.1-52b", "xlstm-1.3b",
+    "whisper-tiny"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode logits == full forward logits (non-MoE-routing
+    archs; MoE tie-flips are tested separately)."""
+    cfg = get_smoke_config(arch).replace(attn_impl="naive",
+                                         moe_capacity_factor=8.0)
+    params = MD.init_params(cfg, jax.random.PRNGKey(5))
+    B, S = 2, 20
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0,
+                              cfg.vocab_size)
+    kw = {}
+    if cfg.is_encdec:
+        kw["encoder_frames"] = jax.random.normal(
+            jax.random.PRNGKey(7), (B, cfg.encoder_seq, cfg.d_model))
+    full = MD.logits_fn(cfg, params, toks, **kw)
+    state = MD.init_decode_state(cfg, B, S)
+    if cfg.is_encdec:
+        state["cross"] = MD.build_cross_cache(
+            cfg, params, MD.encode(cfg, params, kw["encoder_frames"]))
+    outs = []
+    for t in range(S):
+        lg, state = MD.decode_step(cfg, params, state, toks[:, t],
+                                   jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full)) / jnp.max(jnp.abs(full)))
+    assert rel < 2e-2, rel
+
+
+@pytest.mark.parametrize("arch", ["qwen3-moe-235b-a22b",
+                                  "granite-moe-3b-a800m"])
+def test_decode_mostly_matches_forward_moe(arch):
+    """MoE archs: decode vs forward agree except where the router sits on a
+    top-k tie boundary (fp-order flips are inherent to discrete routing)."""
+    cfg = get_smoke_config(arch).replace(attn_impl="naive",
+                                         moe_capacity_factor=8.0)
+    params = MD.init_params(cfg, jax.random.PRNGKey(5))
+    B, S = 2, 20
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0,
+                              cfg.vocab_size)
+    full = MD.logits_fn(cfg, params, toks)
+    state = MD.init_decode_state(cfg, B, S)
+    outs = []
+    for t in range(S):
+        lg, state = MD.decode_step(cfg, params, state, toks[:, t],
+                                   jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    scale = float(jnp.max(jnp.abs(full)))
+    per_pos = np.asarray(jnp.max(jnp.abs(dec - full), axis=(0, 2))) / scale
+    assert (per_pos < 2e-2).mean() >= 0.7, per_pos
+
+
+def test_sliding_window_limits_context():
+    """starcoder2's sliding window: token far beyond the window cannot
+    attend to the first tokens."""
+    cfg = get_smoke_config("starcoder2-3b")
+    assert cfg.sliding_window == 16
+    params = MD.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(8), (1, 48), 0,
+                              cfg.vocab_size)
+    base = MD.logits_fn(cfg, params, toks)
+    # perturb a token OUTSIDE the last token's window: no effect on last pos
+    toks2 = toks.at[0, 5].set((toks[0, 5] + 1) % cfg.vocab_size)
+    pert = MD.logits_fn(cfg, params, toks2)
+    np.testing.assert_allclose(np.asarray(base[0, -1]),
+                               np.asarray(pert[0, -1]), atol=1e-5)
+    # perturb INSIDE the window: must change the last position
+    toks3 = toks.at[0, 40].set((toks[0, 40] + 1) % cfg.vocab_size)
+    pert3 = MD.logits_fn(cfg, params, toks3)
+    assert float(jnp.max(jnp.abs(base[0, -1] - pert3[0, -1]))) > 1e-6
+
+
+def test_full_configs_match_assignment_table():
+    """The full (non-smoke) configs carry the exact assigned dimensions."""
+    expect = {
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for arch, (L, D, H, KV, FF, V) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.num_layers, cfg.d_model, cfg.num_heads,
+                cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size) == \
+            (L, D, H, KV, FF, V), arch
+    moe = get_config("qwen3-moe-235b-a22b")
+    assert (moe.num_experts, moe.experts_per_token) == (128, 8)
+    gran = get_config("granite-moe-3b-a800m")
+    assert (gran.num_experts, gran.experts_per_token) == (40, 8)
+    jam = get_config("jamba-v0.1-52b")
+    assert (jam.num_experts, jam.experts_per_token) == (16, 2)
+    assert sum(b.mixer == "attn" for b in jam.cycle) == 1   # 1:7 interleave
+    assert sum(b.mixer == "mamba" for b in jam.cycle) == 7

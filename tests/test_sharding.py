@@ -1,0 +1,116 @@
+"""Sharding-rule tests: spec trees mirror parameter trees, divisibility
+sanitization, and cache-spec selection logic."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import specs as SP
+from repro.sharding import rules as R
+
+AXIS = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_cover_every_leaf(arch):
+    cfg = get_config(arch)
+    pshape = SP.params_shape(cfg)
+    specs = R.param_specs(cfg, pshape)
+    leaves_p = jax.tree_util.tree_leaves(pshape)
+    leaves_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_p) == len(leaves_s)
+    for lp, ls in zip(leaves_p, leaves_s):
+        assert isinstance(ls, P)
+        assert len(ls) <= len(lp.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_sanitized_specs_divide_evenly(arch):
+    cfg = get_config(arch)
+    pshape = SP.params_shape(cfg)
+    specs = R.sanitize_specs(R.param_specs(cfg, pshape), pshape, AXIS)
+
+    def check(spec, leaf):
+        for dim, entry in zip(leaf.shape,
+                              tuple(spec) + (None,) * len(leaf.shape)):
+            n = R._n_shards(entry, AXIS)
+            assert dim % n == 0, (arch, leaf.shape, spec)
+        return spec
+
+    jax.tree.map(check, specs, pshape, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_big_matrices_are_sharded():
+    """FSDP sanity: the large 2D weights of a dense arch must be sharded on
+    both mesh axes (no accidental replication of the bulk parameters)."""
+    cfg = get_config("qwen1.5-32b")
+    pshape = SP.params_shape(cfg)
+    specs = R.sanitize_specs(R.param_specs(cfg, pshape), pshape, AXIS)
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(pshape)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = leaf
+    sflat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P))[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        sflat[key] = leaf
+    n_big_sharded = 0
+    for k, leaf in flat.items():
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if n >= 16 * 2**20:     # >= 16M elements
+            spec = sflat[k]
+            assert any(e is not None for e in spec), (k, spec)
+            n_big_sharded += 1
+    assert n_big_sharded >= 4
+
+
+@given(kv=st.sampled_from([2, 4, 8, 16, 32, 40]),
+       batch=st.sampled_from([1, 32, 128, 256]))
+@settings(max_examples=20, deadline=None)
+def test_cache_spec_divisibility(kv, batch):
+    """KV-head dim takes 'model' only when divisible; otherwise the 32k
+    sequence dim does."""
+    shape = (24, batch, 32768, kv, 64)
+    spec = R._cache_leaf_spec("self/0/k", shape,
+                              batch_sharded=batch % 16 == 0 and batch >= 16,
+                              axis_sizes=AXIS)
+    for dim, entry in zip(shape, tuple(spec) + (None,) * 5):
+        assert dim % R._n_shards(entry, AXIS) == 0
+
+
+def test_decode_state_specs_all_shapes():
+    for arch in ("qwen1.5-32b", "jamba-v0.1-52b", "xlstm-1.3b",
+                 "whisper-tiny"):
+        cfg = get_config(arch)
+        for shp in ("decode_32k", "long_500k"):
+            shape = SHAPES_BY_NAME[shp]
+            if shp == "long_500k" and not cfg.supports_long_context():
+                continue
+            sshape = SP.decode_state_shape(cfg, shape)
+            specs = R.sanitize_specs(
+                R.decode_state_specs(cfg, sshape, shape.global_batch, AXIS),
+                sshape, AXIS)
+            jax.tree.map(
+                lambda sp, lf: [
+                    d % R._n_shards(e, AXIS) == 0 or pytest.fail(str((sp, lf)))
+                    for d, e in zip(lf.shape, tuple(sp) + (None,) * 8)],
+                specs, sshape, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_long_context_rule():
+    assert get_config("xlstm-1.3b").supports_long_context()
+    assert get_config("jamba-v0.1-52b").supports_long_context()
+    assert get_config("starcoder2-3b").supports_long_context()  # SW 4096
+    assert not get_config("qwen1.5-32b").supports_long_context()
+    assert not get_config("qwen3-moe-235b-a22b").supports_long_context()
+    assert not get_config("whisper-tiny").supports_long_context()

@@ -1,0 +1,151 @@
+"""Substrate tests: data partitioning (hypothesis), optimizers, checkpoint
+round-trips, losses, energy model."""
+import os
+import tempfile
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import FLConfig
+from repro.core import energy as EN
+from repro.data.partition import (client_label_histograms, global_histogram,
+                                  partition_clients)
+from repro.data.synthetic import make_image_dataset, make_token_dataset
+from repro.optim import adamw, apply_updates, fedprox_grad, sgd
+
+
+# ----------------------------- partition ------------------------------
+
+@given(nu=st.sampled_from([1.0, 0.8, 0.5]), n_clients=st.integers(5, 40),
+       seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_partition_invariants(nu, n_clients, seed):
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 10, 4000).astype(np.int32)
+    cfg = FLConfig(num_clients=n_clients, non_iid_level=nu)
+    clients = partition_clients(y, cfg, seed=seed)
+    assert len(clients) == n_clients
+    varpi = 4000 // n_clients
+    for c in clients:
+        total = len(c.train_idx) + len(c.val_idx) + len(c.test_idx)
+        # local size within [varpi/6, 2*varpi] (allowing the floor of 10)
+        assert total >= max(varpi // 6, 10) - 1
+        assert total <= 2 * varpi + 1
+        # 80/10/10 split
+        assert abs(len(c.train_idx) - 0.8 * total) <= 2
+        # non-IID level: fraction of primary label ~ nu
+        lab = y[np.concatenate([c.train_idx, c.val_idx, c.test_idx])]
+        frac = (lab == c.primary_label).mean()
+        assert frac >= nu - 0.15
+
+
+def test_partition_histograms():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 10, 5000).astype(np.int32)
+    cfg = FLConfig(num_clients=20, non_iid_level=1.0)
+    clients = partition_clients(y, cfg)
+    h = client_label_histograms(y, clients, 10)
+    # at nu=1 every client's histogram is (approximately) one-hot
+    assert (h.max(axis=1) > 0.95).all()
+    g = global_histogram(y, 10)
+    np.testing.assert_allclose(g.sum(), 1.0)
+
+
+def test_synthetic_datasets():
+    tr, te = make_image_dataset("mnist", n_train=500, n_test=100)
+    assert tr.x.shape == (500, 28, 28, 1) and te.y.shape == (100,)
+    assert tr.x.min() >= 0 and tr.x.max() <= 1
+    tr2, _ = make_image_dataset("cifar", n_train=200, n_test=50)
+    assert tr2.x.shape == (200, 32, 32, 3)
+    toks, topics = make_token_dataset(n=100, vocab=64, seq_len=16)
+    assert toks.shape == (100, 16) and toks.max() < 64
+
+
+# ----------------------------- optimizers -----------------------------
+
+def _quad_loss(p):
+    return ((p["w"] - 3.0) ** 2).sum() + ((p["b"] + 1.0) ** 2).sum()
+
+
+@pytest.mark.parametrize("maker", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9), lambda: adamw(0.1)])
+def test_optimizers_minimize_quadratic(maker):
+    init, upd = maker()
+    p = {"w": jnp.zeros((3,)), "b": jnp.zeros((2,))}
+    s = init(p)
+    for _ in range(200):
+        g = jax.grad(_quad_loss)(p)
+        u, s = upd(g, s, p)
+        p = apply_updates(p, u)
+    assert _quad_loss(p) < 1e-3
+
+
+def test_fedprox_pulls_toward_global():
+    p = {"w": jnp.ones((4,)) * 5.0}
+    glob = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.zeros((4,))}
+    g2 = fedprox_grad(g, p, glob, mu=0.1)
+    np.testing.assert_allclose(np.asarray(g2["w"]), 0.5)   # mu*(w - w_t)
+
+
+# ----------------------------- checkpoint -----------------------------
+
+def test_checkpoint_roundtrip():
+    from repro.checkpoint.io import restore, save
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "t": (jnp.zeros((2,)), jnp.ones((1,), jnp.int32))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt")
+        save(path, tree, step=7)
+        got, step = restore(path, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+# ----------------------------- losses ---------------------------------
+
+@given(b=st.integers(1, 3), s=st.integers(3, 40), v=st.integers(5, 50),
+       chunk=st.integers(2, 16))
+@settings(max_examples=25, deadline=None)
+def test_chunked_xent_matches_direct(b, s, v, chunk):
+    from repro.models.layers import chunked_softmax_xent
+    key = jax.random.PRNGKey(b * s + v)
+    ks = jax.random.split(key, 4)
+    d = 8
+    x = jax.random.normal(ks[0], (b, s, d))
+    w = jax.random.normal(ks[1], (d, v))
+    labels = jax.random.randint(ks[2], (b, s), 0, v)
+    mask = (jax.random.uniform(ks[3], (b, s)) > 0.3).astype(jnp.float32)
+    got = chunked_softmax_xent(None, x, w, labels, mask, chunk=chunk)
+    logits = x @ w
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    expect = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    np.testing.assert_allclose(float(got), float(expect), rtol=2e-5,
+                               atol=1e-5)
+
+
+# ----------------------------- energy ---------------------------------
+
+def test_energy_model():
+    cfg = FLConfig(num_clients=10)
+    e = EN.init_energy(cfg, jax.random.PRNGKey(0))
+    assert e.shape == (10,) and float(e.min()) == 100.0
+    cfg2 = cfg.replace(init_energy_mode="normal")
+    e2 = EN.init_energy(cfg2, jax.random.PRNGKey(0))
+    assert float(e2.min()) >= 50.0 and float(e2.max()) <= 100.0
+    sizes = jnp.full((10,), 600, jnp.int32)
+    sel = jnp.zeros((10,), bool).at[0].set(True)
+    out = EN.apply_round(e, sel, sizes, cfg)
+    assert float(out[0]) < 100.0 and float(out[1]) == 100.0
+    # floors at zero
+    tiny = jnp.full((10,), 0.5, jnp.float32)
+    out2 = EN.apply_round(tiny, jnp.ones((10,), bool), sizes, cfg)
+    assert float(out2.min()) == 0.0
