@@ -91,6 +91,53 @@ def bench_selection(quick: bool):
 
 
 # ----------------------------------------------------------------------
+# micro: cohort execution engine (repro.sim)
+# ----------------------------------------------------------------------
+
+def bench_cohort_engine(quick: bool):
+    """Sequential per-client loop vs the vectorized cohort engine
+    (repro.sim) at several cohort sizes: one full cohort of local
+    training + FedAvg aggregation per call, identical shuffles/batches
+    in both backends."""
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+    from repro.sim.runtime import make_runtime
+
+    cohorts = [2, 4, 8, 16] if quick else [2, 4, 8, 16, 32, 64]
+    nclients = max(cohorts)
+    # near-uniform shards (~130 train samples -> 4 steps/client) keep the
+    # comparison about execution, not about padding waste
+    cfg = FLConfig(num_clients=nclients, num_clusters=1, local_epochs=1,
+                   imbalance_low=0.9, imbalance_high=1.1, seed=0)
+    train, _ = make_image_dataset("mnist", n_train=nclients * 165,
+                                  n_test=64, seed=0)
+    clients = partition_clients(train.y, cfg, seed=0)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    history = np.zeros((nclients,), np.int64)
+    seq = make_runtime(cfg.replace(runtime="sequential"), adapter,
+                       train.x, train.y, clients)
+    vec = make_runtime(cfg.replace(runtime="vectorized"), adapter,
+                       train.x, train.y, clients)
+    out = {}
+    for c in cohorts:
+        sel = np.arange(c)
+        us_s = _t(lambda: seq.train_cohort(params, sel, history),
+                  n=3, warmup=1)
+        us_v = _t(lambda: vec.train_cohort(params, sel, history),
+                  n=3, warmup=1)
+        speedup = us_s / us_v
+        steps = sum((clients[i].size - min(32, clients[i].size))
+                    // min(32, clients[i].size) + 1 for i in range(c))
+        _row(f"cohort_engine_seq_C{c}", us_s, f"steps={steps}")
+        _row(f"cohort_engine_vec_C{c}", us_v, f"speedup={speedup:.2f}x")
+        out[c] = {"seq_us": us_s, "vec_us": us_v, "speedup": speedup}
+    _save("cohort_engine", out)
+
+
+# ----------------------------------------------------------------------
 # paper figures (FL simulations)
 # ----------------------------------------------------------------------
 
@@ -211,6 +258,7 @@ def bench_virtual_dataset(quick: bool):
 BENCHES = {
     "kernels": bench_kernels,
     "selection": bench_selection,
+    "cohort_engine": bench_cohort_engine,
     "fig3": bench_virtual_dataset,
     "fig4": bench_fig4,
     "fig5": bench_fig5,

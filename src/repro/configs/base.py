@@ -230,6 +230,16 @@ class FLConfig:
     # gradient_cluster_auction | gradient_cluster_random |
     # weights_cluster_random  | random
 
+    # cohort execution backend (repro.sim): 'sequential' runs the
+    # reference per-client loop; 'vectorized' runs whole cohorts as one
+    # compiled vmap/scan program per size bucket (see ROADMAP.md §Usage).
+    runtime: str = "sequential"
+    # client-axis vmap width inside one compiled cohort program; chunks of
+    # this width run under lax.map so the per-chunk working set stays
+    # cache-resident on CPU (full-width vmap thrashes; measured 1.4-2x
+    # slower). Must be a power of two.
+    cohort_vmap_width: int = 4
+
     seed: int = 0
 
     def replace(self, **kw) -> "FLConfig":

@@ -138,7 +138,8 @@ def kmeans(features: jnp.ndarray, k: int, key, iters: int = 25,
 def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
                     key, feature_kind: str = "gradient",
                     local_steps_fn: Callable = None,
-                    assign_fn: Callable = None
+                    assign_fn: Callable = None,
+                    precomputed_feats: Optional[jnp.ndarray] = None
                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Cluster all clients. client_data: list of (x, y) arrays per client.
 
@@ -147,24 +148,35 @@ def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
       * 'weights'  — the Wang et al. [2] baseline: feature = local model
         delta after one epoch of SGD (needs local_steps_fn).
 
+    ``precomputed_feats`` (N, D) bypasses the per-client feature loop —
+    the repro.sim vectorized runtime computes the same features as one
+    batched program; projection and k-means still run here so both paths
+    share one code path from raw features onward.
+
     Returns (labels (N,), centroids, features).
     """
     n = cfg.num_clients
-    feats = []
     proj = None
-    for i in range(n):
-        x, y = client_data[i]
-        ki = jax.random.fold_in(key, i)
-        if feature_kind == "gradient":
-            f = client_gradient_feature(grad_fn, params, x, y, x.shape[0],
-                                        cfg, ki)
-        else:
-            f = local_steps_fn(params, x, y, ki)
-        if proj is None and f.shape[0] > cfg.cluster_feature_dim * 8:
-            proj = random_projection(jax.random.PRNGKey(1234), f.shape[0],
-                                     cfg.cluster_feature_dim)
-        feats.append(f)
-    feats = jnp.stack(feats)
+    if precomputed_feats is not None:
+        feats = precomputed_feats
+        if feats.shape[1] > cfg.cluster_feature_dim * 8:
+            proj = random_projection(jax.random.PRNGKey(1234),
+                                     feats.shape[1], cfg.cluster_feature_dim)
+    else:
+        feats = []
+        for i in range(n):
+            x, y = client_data[i]
+            ki = jax.random.fold_in(key, i)
+            if feature_kind == "gradient":
+                f = client_gradient_feature(grad_fn, params, x, y,
+                                            x.shape[0], cfg, ki)
+            else:
+                f = local_steps_fn(params, x, y, ki)
+            if proj is None and f.shape[0] > cfg.cluster_feature_dim * 8:
+                proj = random_projection(jax.random.PRNGKey(1234), f.shape[0],
+                                         cfg.cluster_feature_dim)
+            feats.append(f)
+        feats = jnp.stack(feats)
     if proj is not None:
         feats = feats @ proj
     labels, cent = kmeans(feats, cfg.num_clusters, key,

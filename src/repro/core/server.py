@@ -7,9 +7,12 @@ Stage 3  (per round): winners run I local epochs (FedAvg local SGD, or
                       FedProx with the proximal term), server aggregates
                       w_{t+1} = sum_k p_k w^k_{t+1}, energy/history update.
 
-The simulator runs clients sequentially on one host (the paper does the
-same); the *launch* layer maps cohorts onto mesh axes for the TPU-scale
-path — see repro/launch/train.py.
+Stage-3 execution is delegated to a pluggable :mod:`repro.sim` cohort
+runtime (``cfg.runtime``): ``sequential`` runs clients one by one (the
+paper's own execution model, kept as the reference oracle), ``vectorized``
+runs the whole cohort as one compiled vmap/scan program per size bucket;
+the *launch* layer additionally maps cohorts onto mesh axes for the
+TPU-scale path — see repro/launch/train.py.
 """
 from __future__ import annotations
 
@@ -27,15 +30,8 @@ from repro.core import energy as EN
 from repro.core import selection as SEL
 from repro.core.adapters import ModelAdapter
 from repro.core.auction import reward_bid_share, reward_sample_share
-from repro.optim import apply_updates, fedprox_grad, sgd
-
-
-def _tree_weighted_sum(trees: List[Any], weights: np.ndarray):
-    """sum_k p_k * tree_k."""
-    out = jax.tree.map(lambda x: x * weights[0], trees[0])
-    for t, w in zip(trees[1:], weights[1:]):
-        out = jax.tree.map(lambda a, b: a + b * w, out, t)
-    return out
+from repro.optim import apply_updates, sgd
+from repro.sim.runtime import make_runtime
 
 
 @dataclass
@@ -65,7 +61,7 @@ class FederatedServer:
         self.key = jax.random.PRNGKey(cfg.seed if seed is None else seed)
         self.params = adapter.init(self._next_key())
         self.logs: List[RoundLog] = []
-        self._local_step = jax.jit(self._make_local_step())
+        self.runtime = make_runtime(cfg, adapter, x, y, clients)
 
         sizes = jnp.asarray([c.size for c in clients], jnp.int32)
         self.state = SEL.SelectionState(
@@ -84,19 +80,6 @@ class FederatedServer:
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
-
-    def _make_local_step(self):
-        _, upd = sgd(self.cfg.lr, momentum=self.cfg.local_momentum)
-
-        def step(params, opt_state, batch, global_params):
-            g = self.adapter.grad(params, batch)
-            if self.cfg.aggregator == "fedprox":
-                g = fedprox_grad(g, params, global_params,
-                                 self.cfg.fedprox_mu)
-            u, opt_state = upd(g, opt_state, params)
-            return apply_updates(params, u), opt_state
-
-        return step
 
     # ------------------------------------------------------------------
     def cluster(self):
@@ -123,32 +106,22 @@ class FederatedServer:
             delta = jax.tree.map(lambda a, b: (a - b).reshape(-1), p, params)
             return jnp.concatenate(jax.tree.leaves(delta))
 
+        key = self._next_key()
+        # the runtime may compute the whole feature pass as one batched
+        # program (vectorized backend); None -> reference per-client loop
+        feats = self.runtime.cluster_features(self.params, key, feature_kind)
         labels, cent, feats = CL.cluster_clients(
-            self.adapter.grad, self.params, data, cfg, self._next_key(),
+            self.adapter.grad, self.params, data, cfg, key,
             feature_kind=feature_kind, local_steps_fn=local_steps_fn,
-            assign_fn=self.assign_fn)
+            assign_fn=self.assign_fn, precomputed_feats=feats)
         self.state = SEL.SelectionState(
             clusters=labels.astype(jnp.int32), residual=self.state.residual,
             history=self.state.history, local_sizes=self.state.local_sizes)
 
     # ------------------------------------------------------------------
     def local_train(self, client_idx: int, global_params):
-        cfg = self.cfg
-        c = self.clients[client_idx]
-        x, y = self.x[c.train_idx], self.y[c.train_idx]
-        init, _ = sgd(cfg.lr, momentum=cfg.local_momentum)
-        p = global_params
-        opt = init(p)
-        bs = min(32, len(x))
-        rng = np.random.default_rng(int(self.state.history[client_idx]) * 977
-                                    + client_idx)
-        for _ in range(cfg.local_epochs):
-            order = rng.permutation(len(x))
-            for i in range(0, len(x) - bs + 1, bs):
-                idx = order[i:i + bs]
-                p, opt = self._local_step(
-                    p, opt, {"x": x[idx], "y": y[idx]}, global_params)
-        return p
+        return self.runtime.train_client(
+            global_params, client_idx, int(self.state.history[client_idx]))
 
     # ------------------------------------------------------------------
     def run_round(self, t: int) -> RoundLog:
@@ -157,12 +130,11 @@ class FederatedServer:
         win_np = np.asarray(win)
         sel_idx = np.nonzero(win_np)[0]
 
-        # stage 3: local training + aggregation
-        locals_ = [self.local_train(i, self.params) for i in sel_idx]
-        sizes = np.array([self.clients[i].size for i in sel_idx], np.float64)
-        pk = sizes / sizes.sum() if sizes.sum() else sizes
-        if locals_:
-            self.params = _tree_weighted_sum(locals_, pk)
+        # stage 3: local training + aggregation (cohort runtime backend)
+        new_params = self.runtime.train_cohort(
+            self.params, sel_idx, np.asarray(self.state.history))
+        if new_params is not None:
+            self.params = new_params
 
         # rewards
         if cfg.reward_model == "bid_share" and "bids" in info:

@@ -12,9 +12,26 @@ Two modes:
     topic-conditional token shards; one FL round = selection -> local LM
     steps -> weighted aggregation.
 
+Cohort execution backend (``--runtime``, see repro/sim/):
+
+  * ``sequential`` (default): the reference oracle — each winner trains
+    in its own Python loop of jitted steps.
+  * ``vectorized``: whole-cohort execution — winners are packed into
+    padded, size-bucketed ``(C, steps, bs, ...)`` tensors and their local
+    epochs run as one compiled vmap/scan program per bucket, with the
+    weighted FedAvg aggregation fused in.  Results match ``sequential``
+    up to float reassociation (same shuffles, same batch boundaries).
+    Caveat: clients are bucketed by (batch size, pow2 step band) and
+    padded to the bucket's max step count, so uneven cohorts pay up to
+    ~2x the smallest member's steps within a band; jit retraces per
+    bucket shape (padding rounds the client axis to a multiple of the
+    vmap chunk width and steps to a multiple of 4 to bound the cache).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode paper \
       --scheme gradient_cluster_auction --rounds 30
+  PYTHONPATH=src python -m repro.launch.train --mode paper \
+      --runtime vectorized --clients 200 --rounds 30
   PYTHONPATH=src python -m repro.launch.train --mode transformer \
       --arch qwen2-0.5b --rounds 3
 """
@@ -42,7 +59,7 @@ def run_paper(args) -> dict:
         local_epochs=args.local_epochs, lr=args.lr,
         non_iid_level=args.nu, scheme=args.scheme,
         aggregator=args.aggregator, init_energy_mode=args.energy_mode,
-        seed=args.seed)
+        runtime=args.runtime, seed=args.seed)
     train, test = make_image_dataset(args.dataset,
                                      n_train=args.pool, n_test=args.pool // 6,
                                      seed=args.seed)
@@ -56,6 +73,7 @@ def run_paper(args) -> dict:
     out = {
         "mode": "paper", "scheme": args.scheme, "nu": args.nu,
         "aggregator": args.aggregator, "dataset": args.dataset,
+        "runtime": args.runtime,
         "rounds": [l.round for l in logs],
         "test_acc": [l.test_acc for l in logs],
         "test_loss": [l.test_loss for l in logs],
@@ -76,7 +94,8 @@ def run_transformer(args) -> dict:
         num_clients=max(10, args.clients // 5), num_clusters=5,
         select_ratio=0.2, rounds=args.rounds, lr=args.lr,
         non_iid_level=args.nu, scheme=args.scheme, num_classes=10,
-        sample_window=8, cluster_resamples=2, seed=args.seed)
+        sample_window=8, cluster_resamples=2, runtime=args.runtime,
+        seed=args.seed)
     toks, topics = make_token_dataset(
         num_topics=10, vocab=mcfg.vocab_size, seq_len=32,
         n=cfg.num_clients * 40, seed=args.seed)
@@ -89,6 +108,7 @@ def run_transformer(args) -> dict:
     logs = srv.run(verbose=not args.quiet)
     return {
         "mode": "transformer", "arch": args.arch, "scheme": args.scheme,
+        "runtime": args.runtime,
         "rounds": [l.round for l in logs],
         "test_loss": [l.test_loss for l in logs],
         "test_acc": [l.test_acc for l in logs],
@@ -107,6 +127,11 @@ def main():
     ap.add_argument("--scheme", default="gradient_cluster_auction")
     ap.add_argument("--aggregator", default="fedavg",
                     choices=["fedavg", "fedprox"])
+    ap.add_argument("--runtime", default="sequential",
+                    choices=["sequential", "vectorized"],
+                    help="cohort execution backend (repro.sim): "
+                         "'vectorized' runs whole cohorts as one compiled "
+                         "vmap/scan program per size bucket")
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--clusters", type=int, default=10)
     ap.add_argument("--select-ratio", type=float, default=0.1)

@@ -37,7 +37,27 @@ def _fc_init(key, shape):
 
 
 def conv2d(x, w, b, padding="VALID"):
-    """x: (B,H,W,C); w: (kh,kw,cin,cout)."""
+    """x: (B,H,W,C); w: (kh,kw,cin,cout) — im2col formulation.
+
+    Expressing the conv as patches @ w lowers to one GEMM: on CPU this is
+    ~2x faster (forward+backward) than lax.conv for these 5x5 kernels,
+    and under the cohort engine's per-client vmap it becomes a batched
+    GEMM instead of XLA's slow grouped-convolution path.
+    """
+    kh, kw, cin, cout = w.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        x = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw),
+                        (0, 0)))
+    oh, ow = x.shape[1] - kh + 1, x.shape[2] - kw + 1
+    cols = [x[:, i:i + oh, j:j + ow, :]
+            for i in range(kh) for j in range(kw)]
+    patches = jnp.concatenate(cols, axis=-1)     # (B, oh, ow, kh*kw*cin)
+    return patches @ w.reshape(kh * kw * cin, cout) + b
+
+
+def conv2d_lax(x, w, b, padding="VALID"):
+    """Reference lax.conv path (oracle for conv2d's im2col rewrite)."""
     y = lax.conv_general_dilated(
         x, w, window_strides=(1, 1), padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -45,8 +65,13 @@ def conv2d(x, w, b, padding="VALID"):
 
 
 def maxpool2(x):
-    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
-                             (1, 2, 2, 1), "VALID")
+    """2x2/stride-2 max pool via reshape (gradient avoids the slow
+    select-and-scatter path of reduce_window; VALID semantics)."""
+    b, h, w, c = x.shape
+    if h % 2 or w % 2:
+        x = x[:, :h - h % 2, :w - w % 2, :]
+        b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max((2, 4))
 
 
 def batchnorm(x, scale, bias, eps=1e-5):

@@ -1,0 +1,179 @@
+"""Cohort packing: turn a set of selected clients' index shards into the
+dense, padded minibatch tensors the vectorized engine consumes.
+
+The sequential oracle (``SequentialRuntime.train_client``) iterates, per
+client, ``local_epochs`` shuffled passes of full minibatches of size
+``bs = min(32, n)`` and *drops the remainder batch* — so every executed
+step sees exactly ``bs`` real samples.  Packing therefore never pads
+*inside* a batch; it only pads along
+
+  * the **step axis** — clients with fewer steps than the bucket maximum
+    get trailing dummy steps whose per-step mask is 0 (the engine turns a
+    masked step into the identity), and
+  * the **client axis** — each bucket is padded to a multiple of the
+    engine's vmap chunk width with weight-0 dummy clients.
+
+Clients with different batch sizes (only those with fewer than 32 local
+samples) cannot share a tensor, and clients with wildly different step
+counts would waste compute on padding, so the cohort is split into
+**buckets** keyed by ``(batch size, power-of-two step band)``: within a
+bucket no client runs more than ~2x the steps of another.  The engine
+runs each bucket separately and the bucket partial aggregates (computed
+against the *global* cohort weights) sum to the full FedAvg update.
+
+The shuffle stream matches the oracle bit-for-bit: the same
+``np.random.default_rng(history * 977 + client_idx)`` seed and the same
+per-epoch ``permutation`` draws.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.configs.base import FLConfig
+
+
+@dataclass
+class CohortBucket:
+    """One homogeneous slice of a cohort (shared batch size).
+
+    Shapes: ``xb (C, S, bs, *feat)``, ``yb (C, S, bs)``, ``step_mask
+    (C, S)`` float32 (1 = real step), ``weights (C,)`` float32 global
+    aggregation weights (over *all* buckets they sum to 1; padded rows are
+    0), ``client_idx (C,)`` int32 global client ids (-1 for padding).
+    """
+
+    client_idx: np.ndarray
+    xb: np.ndarray
+    yb: np.ndarray
+    step_mask: np.ndarray
+    weights: np.ndarray
+    batch_size: int
+
+    @property
+    def num_clients(self) -> int:
+        return int(self.client_idx.shape[0])
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.step_mask.shape[1])
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def oracle_batch_plan(n: int, bs: int, epochs: int,
+                      rng: np.random.Generator) -> np.ndarray:
+    """The exact (epochs * steps, bs) local-index plan the sequential
+    oracle executes: per epoch one ``rng.permutation(n)`` draw, then full
+    minibatches of ``bs`` with the remainder dropped."""
+    steps = (n - bs) // bs + 1 if n >= bs else 0
+    out = np.empty((epochs * steps, bs), np.int64)
+    r = 0
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - bs + 1, bs):
+            out[r] = order[i:i + bs]
+            r += 1
+    return out
+
+
+def sequential_batch_plan(n: int, bs: int) -> np.ndarray:
+    """The clustering feature pass's plan: one epoch, natural order, full
+    minibatches, remainder dropped (mirrors the ``local_steps_fn`` loop)."""
+    steps = (n - bs) // bs + 1 if n >= bs else 0
+    return np.arange(steps * bs, dtype=np.int64).reshape(steps, bs)
+
+
+def _pack_plans(x: np.ndarray, y: np.ndarray,
+                global_idx: Sequence[np.ndarray],
+                plans: Sequence[np.ndarray],
+                client_ids: Sequence[int],
+                weights: Sequence[float],
+                chunk_width: int = 4) -> List[CohortBucket]:
+    """Group (plan, shard) pairs into (batch size, pow2 step band)
+    buckets and materialize the padded tensors."""
+    by_key: Dict[tuple, List[int]] = {}
+    for pos, plan in enumerate(plans):
+        key = (plan.shape[1], _next_pow2(max(plan.shape[0], 1)))
+        by_key.setdefault(key, []).append(pos)
+
+    buckets = []
+    for (bs, _band), members in sorted(by_key.items()):
+        s_max = _round_up(max(plans[m].shape[0] for m in members), 4)
+        # multiple of the vmap chunk width, but never beyond next-pow2
+        # (a 2-client bucket padded to 4 would double its compute)
+        c_pad = min(_round_up(len(members), chunk_width),
+                    _next_pow2(len(members)))
+        xb = np.zeros((c_pad, s_max, bs) + x.shape[1:], x.dtype)
+        yb = np.zeros((c_pad, s_max, bs), y.dtype)
+        mask = np.zeros((c_pad, s_max), np.float32)
+        w = np.zeros((c_pad,), np.float32)
+        cid = np.full((c_pad,), -1, np.int32)
+        for row, m in enumerate(members):
+            plan, shard = plans[m], global_idx[m]
+            s = plan.shape[0]
+            gathered = shard[plan]                     # (s, bs) global ids
+            xb[row, :s] = x[gathered]
+            yb[row, :s] = y[gathered]
+            mask[row, :s] = 1.0
+            w[row] = weights[m]
+            cid[row] = client_ids[m]
+        buckets.append(CohortBucket(client_idx=cid, xb=xb, yb=yb,
+                                    step_mask=mask, weights=w,
+                                    batch_size=bs))
+    return buckets
+
+
+def pack_cohort(x: np.ndarray, y: np.ndarray, clients,
+                sel_idx: np.ndarray, history: np.ndarray,
+                cfg: FLConfig) -> List[CohortBucket]:
+    """Pack the round's winners for the engine.
+
+    ``history`` is the pre-round participation count per client (it seeds
+    the oracle's shuffle rng).  Aggregation weights are the oracle's
+    ``p_k = n_k / sum n_k`` over the whole cohort.
+    """
+    sel_idx = np.asarray(sel_idx)
+    if sel_idx.size == 0:
+        return []
+    sizes = np.array([clients[i].size for i in sel_idx], np.float64)
+    pk = sizes / sizes.sum() if sizes.sum() else sizes
+
+    shards, plans = [], []
+    for i in sel_idx:
+        c = clients[int(i)]
+        n = len(c.train_idx)
+        bs = min(32, n)
+        rng = np.random.default_rng(int(history[int(i)]) * 977 + int(i))
+        shards.append(np.asarray(c.train_idx))
+        plans.append(oracle_batch_plan(n, bs, cfg.local_epochs, rng))
+    return _pack_plans(x, y, shards, plans, [int(i) for i in sel_idx],
+                       [float(p) for p in pk],
+                       chunk_width=cfg.cohort_vmap_width)
+
+
+def pack_feature_pass(x: np.ndarray, y: np.ndarray, clients,
+                      chunk_width: int = 4) -> List[CohortBucket]:
+    """Pack *all* clients for the clustering weight-feature pass: one
+    in-order epoch per client (no shuffle), unit weights (features are
+    returned per client, not aggregated)."""
+    shards, plans = [], []
+    for c in clients:
+        n = len(c.train_idx)
+        bs = min(32, n)
+        shards.append(np.asarray(c.train_idx))
+        plans.append(sequential_batch_plan(n, bs))
+    ids = list(range(len(clients)))
+    return _pack_plans(x, y, shards, plans, ids, [1.0] * len(clients),
+                       chunk_width=chunk_width)

@@ -1,0 +1,182 @@
+"""CohortRuntime: pluggable execution backends for a round's local
+training (selected via ``FLConfig.runtime`` / ``train.py --runtime``).
+
+  * ``sequential`` — the reference oracle: one jitted local step, Python
+    loops over clients and minibatches (the paper's own execution model).
+  * ``vectorized`` — the repro.sim cohort engine: the whole cohort's
+    local epochs run as one compiled program per size bucket (vmap over
+    clients, scan over steps), with the weighted aggregation fused in.
+
+Both backends are bit-compatible in *behavior* (same shuffles, same batch
+boundaries, same FedAvg weights); results agree up to float
+reassociation.  The sequential backend stays the ground truth the
+vectorized one is tested against (tests/test_sim.py).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.adapters import ModelAdapter
+from repro.optim import apply_updates, fedprox_grad, sgd
+from repro.sim.cohort import pack_cohort, pack_feature_pass
+from repro.sim.engine import CohortEngine
+
+RUNTIMES = ("sequential", "vectorized")
+
+
+def tree_weighted_sum(trees: List[Any], weights: np.ndarray):
+    """sum_k p_k * tree_k (the FedAvg reduction)."""
+    out = jax.tree.map(lambda x: x * weights[0], trees[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = jax.tree.map(lambda a, b: a + b * w, out, t)
+    return out
+
+
+class CohortRuntime(Protocol):
+    """What FederatedServer needs from an execution backend."""
+
+    name: str
+
+    def train_cohort(self, global_params, sel_idx: np.ndarray,
+                     history: np.ndarray) -> Optional[Any]:
+        """Run local training for the winners and return the aggregated
+        global params (None for an empty cohort)."""
+        ...
+
+    def train_client(self, global_params, client_idx: int,
+                     history_count: int) -> Any:
+        """One client's local params after its local epochs."""
+        ...
+
+    def cluster_features(self, global_params, key,
+                         feature_kind: str) -> Optional[jnp.ndarray]:
+        """(N, D) clustering features, or None to use the reference
+        per-client loop in repro.core.clustering."""
+        ...
+
+
+# ----------------------------------------------------------------------
+class SequentialRuntime:
+    """Reference oracle: the seed implementation's per-client loop."""
+
+    name = "sequential"
+
+    def __init__(self, cfg: FLConfig, adapter: ModelAdapter,
+                 x: np.ndarray, y: np.ndarray, clients):
+        self.cfg = cfg
+        self.adapter = adapter
+        self.x, self.y = x, y
+        self.clients = clients
+        self._local_step = jax.jit(self._make_local_step())
+
+    def _make_local_step(self):
+        _, upd = sgd(self.cfg.lr, momentum=self.cfg.local_momentum)
+
+        def step(params, opt_state, batch, global_params):
+            g = self.adapter.grad(params, batch)
+            if self.cfg.aggregator == "fedprox":
+                g = fedprox_grad(g, params, global_params,
+                                 self.cfg.fedprox_mu)
+            u, opt_state = upd(g, opt_state, params)
+            return apply_updates(params, u), opt_state
+
+        return step
+
+    def train_client(self, global_params, client_idx: int,
+                     history_count: int):
+        cfg = self.cfg
+        c = self.clients[client_idx]
+        x, y = self.x[c.train_idx], self.y[c.train_idx]
+        init, _ = sgd(cfg.lr, momentum=cfg.local_momentum)
+        p = global_params
+        opt = init(p)
+        bs = min(32, len(x))
+        rng = np.random.default_rng(int(history_count) * 977 + client_idx)
+        for _ in range(cfg.local_epochs):
+            order = rng.permutation(len(x))
+            for i in range(0, len(x) - bs + 1, bs):
+                idx = order[i:i + bs]
+                p, opt = self._local_step(
+                    p, opt, {"x": x[idx], "y": y[idx]}, global_params)
+        return p
+
+    def train_cohort(self, global_params, sel_idx, history):
+        sel_idx = np.asarray(sel_idx)
+        if sel_idx.size == 0:
+            return None
+        locals_ = [self.train_client(global_params, int(i),
+                                     int(history[int(i)]))
+                   for i in sel_idx]
+        sizes = np.array([self.clients[int(i)].size for i in sel_idx],
+                         np.float64)
+        pk = sizes / sizes.sum() if sizes.sum() else sizes
+        return tree_weighted_sum(locals_, pk)
+
+    def cluster_features(self, global_params, key, feature_kind):
+        return None   # use the reference loop in clustering.cluster_clients
+
+
+# ----------------------------------------------------------------------
+class VectorizedRuntime(SequentialRuntime):
+    """Cohort engine backend: one compiled program per bucket shape.
+
+    Inherits the oracle's ``train_client`` (single-client calls have no
+    batching to exploit) and overrides the cohort-level entry points.
+    """
+
+    name = "vectorized"
+
+    def __init__(self, cfg, adapter, x, y, clients):
+        super().__init__(cfg, adapter, x, y, clients)
+        self.engine = CohortEngine(adapter, cfg)
+
+    def train_cohort(self, global_params, sel_idx, history):
+        buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
+                              history, self.cfg)
+        return self.engine.train_cohort(global_params, buckets)
+
+    def cluster_features(self, global_params, key, feature_kind):
+        if feature_kind == "weights":
+            buckets = pack_feature_pass(self.x, self.y, self.clients,
+                                        chunk_width=self.cfg.cohort_vmap_width)
+            return self.engine.weight_features(global_params, buckets,
+                                               len(self.clients))
+        return self.engine.gradient_features(
+            global_params, *self._gather_gradient_windows(key))
+
+    def _gather_gradient_windows(self, key):
+        """Reproduce the reference feature pass's sample-window draws
+        (same fold_in stream as clustering.cluster_clients) and gather
+        them into uniform (N, T0, window, ...) tensors."""
+        from repro.core.clustering import window_indices
+        cfg = self.cfg
+        t0, w = cfg.cluster_resamples, cfg.sample_window
+        n = len(self.clients)
+        xb = np.empty((n, t0, w) + self.x.shape[1:], self.x.dtype)
+        yb = np.empty((n, t0, w), self.y.dtype)
+        for i, c in enumerate(self.clients):
+            shard = np.asarray(c.train_idx)
+            ki = jax.random.fold_in(key, i)
+            for t in range(t0):
+                k = jax.random.fold_in(ki, t)
+                idx = np.asarray(window_indices(k, len(shard), w))
+                g = shard[idx]
+                xb[i, t] = self.x[g]
+                yb[i, t] = self.y[g]
+        return xb, yb
+
+
+# ----------------------------------------------------------------------
+def make_runtime(cfg: FLConfig, adapter: ModelAdapter, x, y,
+                 clients) -> CohortRuntime:
+    if cfg.runtime == "sequential":
+        return SequentialRuntime(cfg, adapter, x, y, clients)
+    if cfg.runtime == "vectorized":
+        return VectorizedRuntime(cfg, adapter, x, y, clients)
+    raise ValueError(
+        f"unknown FLConfig.runtime={cfg.runtime!r}; expected {RUNTIMES}")

@@ -1,5 +1,8 @@
 """Property tests (hypothesis) for the auction mechanism — Theorem 2's Nash
 bid, the cost function, winner selection and reward models."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

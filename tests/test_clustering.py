@@ -1,6 +1,9 @@
 """Clustering tests: sample window, gradient features, k-means behaviour,
 and the paper's core claim that gradient clustering groups clients by local
 distribution under imbalance."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,7 @@
 """Selection-scheme tests: Algorithm 1 invariants across all four schemes."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

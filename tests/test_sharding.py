@@ -1,5 +1,8 @@
 """Sharding-rule tests: spec trees mirror parameter trees, divisibility
 sanitization, and cache-spec selection logic."""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,191 @@
+"""Cohort execution engine (repro.sim): packing invariants and
+sequential-vs-vectorized equivalence across schemes and uneven shards."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.adapters import cnn_adapter
+from repro.core.server import FederatedServer
+from repro.data.partition import partition_clients
+from repro.data.synthetic import make_image_dataset
+from repro.sim.cohort import (oracle_batch_plan, pack_cohort,
+                              sequential_batch_plan)
+from repro.sim.runtime import make_runtime
+
+# small pool + strong imbalance: some clients hold fewer than 32 train
+# samples, so packing produces several batch-size buckets and clients
+# with unequal step counts (exercising the padding masks)
+N_CLIENTS = 10
+POOL = 700
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N_CLIENTS, num_clusters=3, select_ratio=0.4,
+                rounds=2, local_epochs=2, sample_window=10,
+                cluster_resamples=2, init_energy_mode="normal", seed=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_image_dataset("mnist", n_train=POOL, n_test=120,
+                                     seed=3)
+    return train, test
+
+
+def _server(cfg, data):
+    train, test = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    return FederatedServer(cfg, cnn_adapter("mnist"), train.x, train.y,
+                           clients, {"x": test.x[:64], "y": test.y[:64]})
+
+
+# ----------------------------------------------------------------------
+# packing invariants
+# ----------------------------------------------------------------------
+
+def test_oracle_batch_plan_matches_loop():
+    rng = np.random.default_rng(7)
+    plan = oracle_batch_plan(100, 32, 2, rng)
+    rng2 = np.random.default_rng(7)
+    rows = []
+    for _ in range(2):
+        order = rng2.permutation(100)
+        for i in range(0, 100 - 32 + 1, 32):
+            rows.append(order[i:i + 32])
+    assert (plan == np.stack(rows)).all()
+    assert plan.shape == (6, 32)          # 3 full batches per epoch
+
+
+def test_sequential_plan_drops_remainder():
+    plan = sequential_batch_plan(70, 32)
+    assert plan.shape == (2, 32)
+    assert (plan == np.arange(64).reshape(2, 32)).all()
+
+
+def test_pack_cohort_masks_and_weights(data):
+    cfg = _cfg()
+    train, _ = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    sel = np.arange(N_CLIENTS)
+    hist = np.zeros(N_CLIENTS, np.int64)
+    buckets = pack_cohort(train.x, train.y, clients, sel, hist, cfg)
+    sizes = np.array([c.size for c in clients], np.float64)
+    pk = sizes / sizes.sum()
+    seen = {}
+    for b in buckets:
+        assert b.step_mask.shape == b.xb.shape[:2] == b.yb.shape[:2]
+        assert b.xb.shape[2] == b.batch_size
+        for row, cid in enumerate(b.client_idx):
+            if cid < 0:                        # padding row: fully masked
+                assert b.step_mask[row].sum() == 0
+                assert b.weights[row] == 0
+            else:
+                n = clients[cid].size
+                bs = min(32, n)
+                steps = (n - bs) // bs + 1
+                assert b.batch_size == bs
+                assert b.step_mask[row].sum() == steps * cfg.local_epochs
+                assert b.weights[row] == pytest.approx(pk[cid])
+                seen[int(cid)] = seen.get(int(cid), 0) + 1
+    assert sorted(seen) == list(range(N_CLIENTS))   # each client once
+    total_w = sum(float(b.weights.sum()) for b in buckets)
+    assert total_w == pytest.approx(1.0)
+    assert len(buckets) > 1       # uneven shards -> several buckets
+
+
+# ----------------------------------------------------------------------
+# CNN hot-path rewrite oracles (im2col conv / reshape maxpool — the
+# engine's vmap path depends on these formulations, see DESIGN.md)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("padding,cin,cout", [
+    ("VALID", 1, 10), ("VALID", 3, 6), ("SAME", 1, 16), ("SAME", 16, 32),
+])
+def test_conv2d_im2col_matches_lax(padding, cin, cout):
+    from repro.models.cnn import conv2d, conv2d_lax
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (4, 14, 14, cin))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (5, 5, cin, cout))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (cout,))
+    got = conv2d(x, w, b, padding)
+    ref = conv2d_lax(x, w, b, padding)
+    assert got.shape == ref.shape
+    assert float(jnp.max(jnp.abs(got - ref))) < 1e-4
+
+
+@pytest.mark.parametrize("h,w", [(24, 24), (7, 7), (14, 10)])
+def test_maxpool2_matches_reduce_window(h, w):
+    from jax import lax
+    from repro.models.cnn import maxpool2
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, h, w, 5))
+    ref = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                            (1, 2, 2, 1), "VALID")
+    assert (maxpool2(x) == ref).all()
+
+
+# ----------------------------------------------------------------------
+# engine vs oracle equivalence
+# ----------------------------------------------------------------------
+
+def _max_param_diff(p1, p2) -> float:
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)))
+
+
+def test_train_cohort_matches_oracle(data):
+    """One cohort, every client, nonzero histories: aggregated params of
+    the two backends agree up to float reassociation."""
+    cfg = _cfg()
+    train, _ = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    hist = np.arange(N_CLIENTS) % 3
+    sel = np.arange(N_CLIENTS)
+    seq = make_runtime(cfg.replace(runtime="sequential"), adapter,
+                       train.x, train.y, clients)
+    vec = make_runtime(cfg.replace(runtime="vectorized"), adapter,
+                       train.x, train.y, clients)
+    p_seq = seq.train_cohort(params, sel, hist)
+    p_vec = vec.train_cohort(params, sel, hist)
+    assert _max_param_diff(p_seq, p_vec) < 1e-4
+
+
+def test_train_cohort_empty_is_noop(data):
+    cfg = _cfg(runtime="vectorized")
+    train, _ = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    rt = make_runtime(cfg, adapter, train.x, train.y, clients)
+    assert rt.train_cohort(params, np.array([], np.int64),
+                           np.zeros(N_CLIENTS)) is None
+
+
+@pytest.mark.parametrize("scheme,aggregator", [
+    ("random", "fedavg"),
+    ("gradient_cluster_auction", "fedavg"),
+    ("gradient_cluster_auction", "fedprox"),
+])
+def test_full_loop_equivalence(data, scheme, aggregator):
+    """Both runtimes produce identical RoundLog selection/energy fields
+    and matching aggregated params over full rounds (clustering included
+    for the auction scheme — the vectorized gradient-feature pass must
+    reproduce the reference clustering exactly)."""
+    logs, params = {}, {}
+    for runtime in ("sequential", "vectorized"):
+        srv = _server(_cfg(scheme=scheme, aggregator=aggregator,
+                           runtime=runtime), data)
+        logs[runtime] = srv.run()
+        params[runtime] = srv.params
+    for l_seq, l_vec in zip(logs["sequential"], logs["vectorized"]):
+        assert (l_seq.selected == l_vec.selected).all()
+        assert l_seq.energy_std == l_vec.energy_std
+        assert l_seq.mean_bid == l_vec.mean_bid
+        assert l_seq.server_reward == l_vec.server_reward
+    assert _max_param_diff(params["sequential"],
+                           params["vectorized"]) < 1e-4

@@ -3,6 +3,9 @@ round-trips, losses, energy model."""
 import os
 import tempfile
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the optional hypothesis extra")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
