@@ -50,11 +50,11 @@ def bench_kernels(quick: bool):
     x = jax.random.normal(key, (n, f))
     c = jax.random.normal(jax.random.fold_in(key, 1), (k, f))
     us_ref = _t(lambda: ref.kmeans_assign_ref(x, c))
-    lab_p = kmeans_assign(x, c, interpret=True)[0]      # compile once
-    us_pal = _t(lambda: kmeans_assign(x, c, interpret=True)[0])
+    lab_p = kmeans_assign(x, c)[0]      # interpret probed per backend
+    us_pal = _t(lambda: kmeans_assign(x, c)[0])
     match = bool((lab_p == ref.kmeans_assign_ref(x, c)).all())
     _row("kmeans_assign_ref", us_ref, f"N={n} F={f} K={k}")
-    _row("kmeans_assign_pallas_interp", us_pal, f"match={match}")
+    _row("kmeans_assign_pallas", us_pal, f"match={match}")
 
     from repro.models.layers import chunked_attention, naive_attention
     B, S, H, hd = (1, 512, 4, 64) if quick else (2, 2048, 8, 64)
@@ -67,6 +67,52 @@ def bench_kernels(quick: bool):
     err = float(jnp.max(jnp.abs(fa(q, kk, v) - na(q, kk, v))))
     _row("flash_attention_jnp", us_f, f"S={S} err_vs_naive={err:.1e}")
     _row("naive_attention", us_n, f"S={S}")
+
+
+# ----------------------------------------------------------------------
+# micro: stage-1 clustering engine
+# ----------------------------------------------------------------------
+
+def bench_clustering(quick: bool):
+    """Fused jitted k-means engine (batched restarts + incremental ++ +
+    fused assign/update) vs the seed implementation (Python restart loop,
+    (N,K,F)-broadcast seeding, assign_ref) across an N sweep. The seed
+    baseline is skipped above 20k clients — its seeding alone materializes
+    an N*K*F float buffer per centroid pick (1 GB at N=100k)."""
+    from repro.core import clustering as CL
+    ns = [512, 2048] if quick else [2048, 10_000, 50_000, 100_000]
+    f, k = 256, 10
+    ref_cap = 2048 if quick else 20_000
+    rng = np.random.default_rng(0)
+    centers = rng.normal(size=(k, f)) * 8.0
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for n in ns:
+        sizes = [n // k + (1 if i < n % k else 0) for i in range(k)]
+        x = jnp.asarray(np.concatenate(
+            [c + rng.normal(size=(s, f)) for c, s in zip(centers, sizes)]),
+            jnp.float32)
+        assert x.shape[0] == n
+        lab_new, _ = jax.block_until_ready(CL.kmeans(x, k, key))  # warmup
+        us_new = _t(lambda: CL.kmeans(x, k, key), n=3, warmup=0)
+        row = {"fused_us": us_new, "N": n, "F": f, "K": k}
+        derived = ""
+        if n <= ref_cap:
+            # one eager reference run doubles as warmup and label source
+            lab_ref, _ = jax.block_until_ready(
+                CL.kmeans_reference(x, k, key))
+            us_ref = _t(lambda: CL.kmeans_reference(x, k, key),
+                        n=1, warmup=0)
+            agree = float((np.asarray(lab_new) == np.asarray(lab_ref))
+                          .mean())
+            row.update(reference_us=us_ref, speedup=us_ref / us_new,
+                       label_agreement=agree)
+            _row(f"kmeans_reference_N{n}", us_ref, f"F={f} K={k}")
+            derived = (f"speedup={us_ref / us_new:.1f}x "
+                       f"label_agreement={agree:.3f}")
+        _row(f"kmeans_fused_N{n}", us_new, derived)
+        out[n] = row
+    _save("clustering", out)
 
 
 # ----------------------------------------------------------------------
@@ -257,6 +303,7 @@ def bench_virtual_dataset(quick: bool):
 
 BENCHES = {
     "kernels": bench_kernels,
+    "clustering": bench_clustering,
     "selection": bench_selection,
     "cohort_engine": bench_cohort_engine,
     "fig3": bench_virtual_dataset,

@@ -9,12 +9,17 @@ Stage-1 of Algorithm 1:
 
 For LLM-scale models the full gradient is too large to ship; we use a fixed
 random projection of the concatenated (last-block, lm-head) gradient to
-``feature_dim`` — recorded in DESIGN.md as the fleet-scale adaptation. For
-the paper's CNNs the full flattened gradient fits and is used directly.
+``feature_dim`` — applied in column blocks so the (in_dim, feature_dim)
+Gaussian is never materialized whole (DESIGN.md, fleet-scale adaptation).
+For the paper's CNNs the full flattened gradient fits and is used directly.
 
-K-means' assignment step (pairwise distances + argmin) is the fleet-scale
-hotspot and runs through the Pallas kernel (repro.kernels) on TPU; the pure
-jnp path is used on CPU.
+K-means runs through a fully-jitted engine (:func:`kmeans`): incremental
+k-means++ seeding (distance only to the newest centroid per pick), all
+``restarts`` Lloyd runs vmapped inside one compiled program, and the fused
+assign+update step dispatched per backend (Pallas kernel on TPU, the same
+matmul decomposition as XLA ops elsewhere — repro.kernels.ops.lloyd_step).
+The seed implementation is kept verbatim as :func:`kmeans_reference`, the
+run-for-run oracle and benchmark baseline.
 """
 from __future__ import annotations
 
@@ -25,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
+from repro.kernels import ops as KOPS
 
 
 # ----------------------------------------------------------------------
@@ -55,12 +61,40 @@ def client_gradient_feature(grad_fn: Callable, params, data_x, data_y,
 
 
 def random_projection(key, in_dim: int, out_dim: int) -> jnp.ndarray:
-    """Fixed Gaussian projection (Johnson-Lindenstrauss) for LLM gradients."""
+    """Fixed Gaussian projection (Johnson-Lindenstrauss) for LLM gradients.
+
+    Materializes the full (in_dim, out_dim) matrix — fine for tests and
+    small models; the fleet-scale path is :func:`project_features_blocked`,
+    which never holds more than one column block of it."""
     return jax.random.normal(key, (in_dim, out_dim)) / jnp.sqrt(out_dim)
 
 
 def project_feature(feat: jnp.ndarray, proj: Optional[jnp.ndarray]):
     return feat if proj is None else feat @ proj
+
+
+@partial(jax.jit, static_argnames=("out_dim", "block"))
+def project_features_blocked(key, feats: jnp.ndarray, out_dim: int,
+                             block: int = 4096) -> jnp.ndarray:
+    """JL projection of (N, in_dim) features to (N, out_dim) in column
+    blocks: each scan step draws one (block, out_dim) Gaussian slab keyed
+    on the block index and accumulates ``feats[:, b] @ G_b``, so peak
+    memory is O(N·out_dim + block·out_dim) — the (in_dim, out_dim) matrix
+    (100s of GB at LLM gradient widths) is never materialized."""
+    n, in_dim = feats.shape
+    nb = -(-in_dim // block)
+    pad = nb * block - in_dim
+    fp = jnp.pad(feats.astype(jnp.float32), ((0, 0), (0, pad)))
+    fb = fp.reshape(n, nb, block).transpose(1, 0, 2)        # (nb, N, block)
+
+    def body(acc, inp):
+        b, xb = inp
+        g = jax.random.normal(jax.random.fold_in(key, b), (block, out_dim))
+        return acc + xb @ g, None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros((n, out_dim), jnp.float32),
+                          (jnp.arange(nb), fb))
+    return acc / jnp.sqrt(out_dim)
 
 
 # ----------------------------------------------------------------------
@@ -73,9 +107,10 @@ def assign_ref(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(d, axis=1)
 
 
-def _kmeanspp_init(features, k, key):
-    """k-means++ seeding: each next centroid sampled with probability
-    proportional to the squared distance from the nearest chosen one."""
+def _kmeanspp_init_scan(features, k, key):
+    """The seed k-means++ — kept as the seeding oracle: every pick
+    recomputes the distance to *all* chosen centroids through an
+    (N, K, F) broadcast (O(N·K·F) time and memory per pick)."""
     n = features.shape[0]
     k0, key = jax.random.split(key)
     first = jax.random.randint(k0, (), 0, n)
@@ -97,20 +132,104 @@ def _kmeanspp_init(features, k, key):
     return cent
 
 
-def kmeans(features: jnp.ndarray, k: int, key, iters: int = 25,
-           assign_fn: Callable = None,
-           restarts: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Lloyd's algorithm with k-means++ seeding and best-of-``restarts``
-    (by inertia). features: (N, F). Returns (labels (N,), centroids (k,F))."""
+def _kmeanspp_init(features, k, key):
+    """Incremental k-means++: a running min-distance vector is updated
+    with the distance to the *newest* centroid only — O(N·F) time and O(N)
+    state per pick, no (N, K, F) intermediate. Key stream and per-centroid
+    distance math match :func:`_kmeanspp_init_scan` term for term, so the
+    picked seeds are identical (tested)."""
     n = features.shape[0]
-    if assign_fn is None:
-        assign_fn = assign_ref
+    k0, key = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    c0 = features[first]
+    cent0 = jnp.tile(c0[None], (k, 1))
+    dmin0 = ((features - c0[None]) ** 2).sum(-1)
 
+    def pick(carry, i):
+        cent, dmin, key = carry
+        key, kp = jax.random.split(key)
+        p = dmin / jnp.maximum(dmin.sum(), 1e-30)
+        nxt = jax.random.choice(kp, n, p=p)
+        cnew = features[nxt]
+        cent = cent.at[i].set(cnew)
+        dmin = jnp.minimum(dmin, ((features - cnew[None]) ** 2).sum(-1))
+        return (cent, dmin, key), None
+
+    (cent, _, _), _ = jax.lax.scan(pick, (cent0, dmin0, key),
+                                   jnp.arange(1, k))
+    return cent
+
+
+@partial(jax.jit,
+         static_argnames=("k", "iters", "restarts", "assign_fn", "impl"))
+def _kmeans_batched(features, key, *, k: int, iters: int, restarts: int,
+                    assign_fn, impl: str):
+    """One compiled program for the whole stage: incremental k-means++
+    seeding, Lloyd iterations, and the restart-argmin — all ``restarts``
+    runs vmapped, no Python loop and no per-restart host sync."""
+    n = features.shape[0]
+    feats32 = features.astype(jnp.float32)
+
+    def update(cent):
+        if assign_fn is not None:
+            # external assignment (e.g. the Pallas assign kernel under
+            # test) — centroid update stays the one-hot matmul
+            lab = assign_fn(features, cent)
+            onehot = jax.nn.one_hot(lab, k, dtype=jnp.float32)
+            counts = onehot.sum(0)
+            sums = onehot.T @ feats32
+        else:
+            lab, _, sums, counts = KOPS.lloyd_step(features, cent, impl=impl)
+        new = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1.0), cent)
+        return new.astype(features.dtype), lab
+
+    def one_run(kr):
+        cent = _kmeanspp_init(features, k, kr)
+        cent, _ = jax.lax.scan(lambda c, _: (update(c)[0], None), cent,
+                               None, length=iters)
+        if assign_fn is not None:
+            lab = assign_fn(features, cent)
+            inertia = ((feats32 - cent[lab].astype(jnp.float32)) ** 2).sum()
+        else:
+            lab, dist, _, _ = KOPS.lloyd_step(features, cent, impl=impl)
+            inertia = dist.sum()
+        return lab.astype(jnp.int32), cent, inertia
+
+    keys = jax.vmap(lambda r: jax.random.fold_in(key, r))(
+        jnp.arange(restarts))
+    labs, cents, inertias = jax.vmap(one_run)(keys)
+    best = jnp.argmin(inertias)      # first index on ties, like the oracle
+    return labs[best], cents[best]
+
+
+def kmeans(features: jnp.ndarray, k: int, key, iters: int = 25,
+           assign_fn: Callable = None, restarts: int = 4,
+           impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Lloyd's algorithm with k-means++ seeding and best-of-``restarts``
+    (by inertia). features: (N, F). Returns (labels (N,), centroids (k,F)).
+
+    Fully jitted: seeding + Lloyd + restart-argmin run as one compiled
+    program (see :func:`_kmeans_batched`). ``impl`` selects the fused
+    assign+update backend (repro.kernels.ops.lloyd_step: auto | pallas |
+    ref); ``assign_fn`` overrides assignment only (testing hook)."""
+    return _kmeans_batched(features, key, k=k, iters=iters,
+                           restarts=restarts, assign_fn=assign_fn,
+                           impl=impl)
+
+
+def kmeans_reference(features: jnp.ndarray, k: int, key, iters: int = 25,
+                     restarts: int = 4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The seed implementation, kept verbatim as the run-for-run oracle and
+    benchmark baseline: Python loop over restarts with a ``float(inertia)``
+    host sync each, (N, K, F)-broadcast seeding and assignment, separate
+    one-hot matmul update. Same per-restart key stream (fold_in) as
+    :func:`kmeans`."""
     def one_run(key):
-        cent = _kmeanspp_init(features, k, key)
+        cent = _kmeanspp_init_scan(features, k, key)
 
         def step(cent, _):
-            lab = assign_fn(features, cent)
+            lab = assign_ref(features, cent)
             onehot = jax.nn.one_hot(lab, k, dtype=features.dtype)  # (N, k)
             counts = onehot.sum(0)
             sums = onehot.T @ features
@@ -119,7 +238,7 @@ def kmeans(features: jnp.ndarray, k: int, key, iters: int = 25,
             return new, None
 
         cent, _ = jax.lax.scan(step, cent, None, length=iters)
-        lab = assign_fn(features, cent)
+        lab = assign_ref(features, cent)
         inertia = ((features - cent[lab]) ** 2).sum()
         return lab, cent, inertia
 
@@ -153,15 +272,15 @@ def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
     batched program; projection and k-means still run here so both paths
     share one code path from raw features onward.
 
+    K-means runs through the jitted batched-restart engine (the Pallas
+    fused Lloyd step on TPU, its jnp twin elsewhere); oversized features
+    are JL-projected in column blocks first.
+
     Returns (labels (N,), centroids, features).
     """
     n = cfg.num_clients
-    proj = None
     if precomputed_feats is not None:
         feats = precomputed_feats
-        if feats.shape[1] > cfg.cluster_feature_dim * 8:
-            proj = random_projection(jax.random.PRNGKey(1234),
-                                     feats.shape[1], cfg.cluster_feature_dim)
     else:
         feats = []
         for i in range(n):
@@ -172,13 +291,11 @@ def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
                                             x.shape[0], cfg, ki)
             else:
                 f = local_steps_fn(params, x, y, ki)
-            if proj is None and f.shape[0] > cfg.cluster_feature_dim * 8:
-                proj = random_projection(jax.random.PRNGKey(1234), f.shape[0],
-                                         cfg.cluster_feature_dim)
             feats.append(f)
         feats = jnp.stack(feats)
-    if proj is not None:
-        feats = feats @ proj
+    if feats.shape[1] > cfg.cluster_feature_dim * 8:
+        feats = project_features_blocked(jax.random.PRNGKey(1234), feats,
+                                         cfg.cluster_feature_dim)
     labels, cent = kmeans(feats, cfg.num_clusters, key,
                           assign_fn=assign_fn)
     return labels, cent, feats

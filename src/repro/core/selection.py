@@ -62,7 +62,32 @@ def _sample_threshold(key, state: SelectionState, cfg: FLConfig,
 
 def _random_per_cluster(key, state: SelectionState, cfg: FLConfig,
                         eligible: jnp.ndarray) -> jnp.ndarray:
-    """K_j uniform picks per cluster among eligible clients."""
+    """K_j uniform picks per cluster among eligible clients: one segmented
+    rank pass (lexsort by (cluster, noise) + per-segment offsets) instead
+    of an argsort per cluster — same winner sets as the per-cluster loop
+    oracle below under a fixed key (regression-tested)."""
+    kj = k_per_cluster(cfg)
+    n = state.clusters.shape[0]
+    nj = cfg.num_clusters
+    cl = state.clusters
+    noise = jax.random.uniform(key, (n,))
+    # clusters with no eligible member relax to their whole membership
+    has_elig = jnp.zeros((nj,), jnp.int32).at[cl].max(
+        eligible.astype(jnp.int32))
+    e = jnp.where(has_elig[cl] > 0, eligible, True)
+    keyed = jnp.where(e, noise, 2.0)     # ineligible sort after all noise
+    order = jnp.lexsort((keyed, cl))     # cluster-major, noise-minor
+    sizes = jnp.zeros((nj,), jnp.int32).at[cl].add(1)
+    starts = jnp.cumsum(sizes) - sizes   # segment offsets in sorted order
+    rank_in_cluster = jnp.arange(n) - starts[cl[order]]
+    win_sorted = (rank_in_cluster < kj) & e[order]
+    return jnp.zeros((n,), bool).at[order].set(win_sorted)
+
+
+def _random_per_cluster_loop(key, state: SelectionState, cfg: FLConfig,
+                             eligible: jnp.ndarray) -> jnp.ndarray:
+    """Reference oracle for :func:`_random_per_cluster`: the seed
+    implementation's Python loop over clusters (one argsort each)."""
     kj = k_per_cluster(cfg)
     n = state.clusters.shape[0]
     noise = jax.random.uniform(key, (n,))

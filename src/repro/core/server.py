@@ -83,7 +83,13 @@ class FederatedServer:
 
     # ------------------------------------------------------------------
     def cluster(self):
-        """Stage 1: cluster clients (scheme-dependent feature)."""
+        """Stage 1: cluster clients (scheme-dependent feature).
+
+        With the default ``assign_fn=None`` k-means routes through the
+        fused clustering engine (repro.core.clustering.kmeans): one jit
+        for seeding + Lloyd + restart-argmin, the Pallas assign+update
+        kernel on TPU and its jnp twin elsewhere; ``assign_fn`` overrides
+        assignment only (testing hook)."""
         cfg = self.cfg
         if cfg.scheme == "random":
             return

@@ -40,11 +40,24 @@ def _templates(key, num_classes: int, hw: Tuple[int, int, int]):
     return 0.5 + 0.35 * t / jnp.maximum(jnp.abs(t).max(), 1e-6)
 
 
+# fixed name->seed offsets: Python's hash(name) varies per process under
+# hash randomization (PYTHONHASHSEED), which made datasets nondeterministic
+# across runs; unknown names fall back to a stable digest
+_NAME_SEEDS = {"mnist": 11, "fmnist": 22_222, "cifar": 44_444}
+
+
+def _name_seed(name: str) -> int:
+    if name in _NAME_SEEDS:
+        return _NAME_SEEDS[name]
+    import zlib
+    return zlib.crc32(name.encode()) % 65536
+
+
 def make_image_dataset(name: str, n_train: int = 12_000, n_test: int = 2_000,
                        noise: float = 0.12, seed: int = 0) -> Tuple[Dataset, Dataset]:
     hw = (32, 32, 3) if name == "cifar" else (28, 28, 1)
     nc = 10
-    key = jax.random.PRNGKey(seed + hash(name) % 65536)
+    key = jax.random.PRNGKey(seed + _name_seed(name))
     kt, kn1, kn2, ks1, ks2 = jax.random.split(key, 5)
     temps = _templates(kt, nc, hw)
 

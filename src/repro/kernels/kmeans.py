@@ -1,8 +1,16 @@
-"""Pallas TPU kernel: k-means assignment (pairwise distance + argmin).
+"""Pallas TPU kernels for fleet-scale k-means (stage-1 clustering).
 
 The paper's stage-1 clusters N clients by gradient features; at fleet scale
-(N ~ 1e5-1e6 clients, F = 256-4096 features) the assignment step is the
-compute hotspot of every Lloyd iteration. TPU mapping:
+(N ~ 1e5-1e6 clients, F = 256-4096 features) every Lloyd iteration is the
+compute hotspot. Two kernels:
+
+  * :func:`kmeans_assign` — assignment only (pairwise distance + argmin).
+  * :func:`lloyd_step`    — the fused assign+update step: one grid pass
+    over N emits labels and min-distances per tile AND accumulates the
+    per-centroid partial sums / counts, so a full Lloyd iteration needs no
+    separate (N, K) one-hot matmul over a second pass of the features.
+
+TPU mapping (both kernels):
 
   * grid over blocks of N; each step loads an (BN, F) tile of features into
     VMEM (BlockSpec), with the full (K, F) centroid matrix resident (K is
@@ -10,9 +18,15 @@ compute hotspot of every Lloyd iteration. TPU mapping:
   * distances via the MXU:  ||x-c||^2 = ||x||^2 - 2 x·c^T + ||c||^2 — the
     x·c^T term is a (BN, F) @ (F, K) matmul, hardware-aligned when BN and K
     are multiples of (8, 128) and F of 128;
-  * argmin + min-distance computed in-register, written per tile.
+  * argmin + min-distance computed in-register, written per tile;
+  * (lloyd_step) the tile's one-hot^T @ x partial sums and counts are
+    accumulated into a (K, F) / (1, K) output block that every grid step
+    maps to — zeroed at step 0, so the sequential TPU grid acts as the
+    reduction loop.
 
-Validated in interpret mode against ref.kmeans_assign_ref (CPU container).
+``interpret=None`` (the default) probes the backend: compiled on TPU,
+interpret mode elsewhere. Validated in interpret mode against
+ref.kmeans_assign_ref / ref.lloyd_step_ref (CPU container).
 """
 from __future__ import annotations
 
@@ -23,20 +37,56 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, c_ref, cn_ref, lab_ref, dist_ref, *, k_real: int):
-    x = x_ref[...].astype(jnp.float32)            # (BN, F)
-    c = c_ref[...].astype(jnp.float32)            # (Kp, F)
-    cn = cn_ref[...]                              # (1, Kp) ||c||^2 (padded=+inf)
+def _resolve_interpret(interpret):
+    """Backend probe: compiled Pallas on TPU, interpreter elsewhere."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _distances(x, c, cn, k_real):
+    """(BN, Kp) squared distances with padded centroid columns = +inf."""
     prod = jax.lax.dot_general(
         x, c, (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)       # (BN, Kp) on the MXU
     xn = jnp.sum(x * x, axis=1, keepdims=True)    # (BN, 1)
     d = xn - 2.0 * prod + cn                      # (BN, Kp)
-    kp = d.shape[1]
     col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
-    d = jnp.where(col < k_real, d, jnp.inf)
+    return jnp.where(col < k_real, d, jnp.inf), col
+
+
+def _assign_kernel(x_ref, c_ref, cn_ref, lab_ref, dist_ref, *, k_real: int):
+    x = x_ref[...].astype(jnp.float32)            # (BN, F)
+    c = c_ref[...].astype(jnp.float32)            # (Kp, F)
+    cn = cn_ref[...]                              # (1, Kp) ||c||^2
+    d, _ = _distances(x, c, cn, k_real)
     lab_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
     dist_ref[...] = jnp.min(d, axis=1)
+
+
+def _lloyd_kernel(x_ref, c_ref, cn_ref, lab_ref, dist_ref, sum_ref, cnt_ref,
+                  *, k_real: int, n_real: int, block_n: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)            # (BN, F)
+    c = c_ref[...].astype(jnp.float32)            # (Kp, F)
+    cn = cn_ref[...]                              # (1, Kp) ||c||^2
+    d, col = _distances(x, c, cn, k_real)
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)         # (BN,)
+    row = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0) # (BN, Kp)
+    valid = row + i * block_n < n_real            # padded rows masked out
+    lab_ref[...] = lab
+    dist_ref[...] = jnp.where(valid[:, 0], jnp.min(d, axis=1), 0.0)
+    onehot = ((col == lab[:, None]) & valid).astype(jnp.float32)  # (BN, Kp)
+    # partial assign+update: every grid step maps to the same (Kp, F) /
+    # (1, Kp) output block, so += across the sequential grid reduces N
+    @pl.when(i == 0)
+    def _():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+    sum_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (Kp, F) = onehot^T @ x
+    cnt_ref[...] += jnp.sum(onehot, axis=0, keepdims=True)
 
 
 def _pad_to(x, m, axis, value=0.0):
@@ -48,21 +98,29 @@ def _pad_to(x, m, axis, value=0.0):
     return jnp.pad(x, cfgp, constant_values=value)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def kmeans_assign(x: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 128,
-                  interpret: bool = True):
-    """x: (N, F), c: (K, F) -> (labels (N,) int32, min_dist (N,) f32)."""
-    n, f = x.shape
-    k = c.shape[0]
+def _padded(x, c, block_n):
     xp = _pad_to(_pad_to(x, block_n, 0), 128, 1)
     cp = _pad_to(_pad_to(c, 128, 0), 128, 1)
     cn = jnp.sum(cp.astype(jnp.float32) ** 2, axis=1)[None, :]  # (1, Kp)
+    return xp, cp, cn
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_assign(x: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 128,
+                  interpret: bool | None = None):
+    """x: (N, F), c: (K, F) -> (labels (N,) int32, min_dist (N,) f32).
+
+    ``interpret=None`` probes the backend (compiled on TPU only)."""
+    interpret = _resolve_interpret(interpret)
+    n, f = x.shape
+    k = c.shape[0]
+    xp, cp, cn = _padded(x, c, block_n)
     kp = cp.shape[0]
     npad, fp = xp.shape
     grid = (npad // block_n,)
 
     labels, dists = pl.pallas_call(
-        functools.partial(_kernel, k_real=k),
+        functools.partial(_assign_kernel, k_real=k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n, fp), lambda i: (i, 0)),   # feature tile
@@ -80,3 +138,44 @@ def kmeans_assign(x: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 128,
         interpret=interpret,
     )(xp, cp, cn)
     return labels[:n], dists[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lloyd_step(x: jnp.ndarray, c: jnp.ndarray, *, block_n: int = 128,
+               interpret: bool | None = None):
+    """Fused Lloyd assign+update. x: (N, F), c: (K, F) ->
+    (labels (N,) int32, min_dist (N,) f32, sums (K, F) f32, counts (K,) f32)
+    where sums[k] = sum of features assigned to k and counts[k] their count
+    — one grid pass over N, no second (N, K) one-hot matmul."""
+    interpret = _resolve_interpret(interpret)
+    n, f = x.shape
+    k = c.shape[0]
+    xp, cp, cn = _padded(x, c, block_n)
+    kp = cp.shape[0]
+    npad, fp = xp.shape
+    grid = (npad // block_n,)
+
+    labels, dists, sums, counts = pl.pallas_call(
+        functools.partial(_lloyd_kernel, k_real=k, n_real=n,
+                          block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, fp), lambda i: (i, 0)),   # feature tile
+            pl.BlockSpec((kp, fp), lambda i: (0, 0)),        # centroids resident
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),         # ||c||^2
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((kp, fp), lambda i: (0, 0)),        # accumulators
+            pl.BlockSpec((1, kp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+            jax.ShapeDtypeStruct((kp, fp), jnp.float32),
+            jax.ShapeDtypeStruct((1, kp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp, cn)
+    return labels[:n], dists[:n], sums[:k, :f], counts[0, :k]

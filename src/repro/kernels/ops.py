@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as REF
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.kmeans import kmeans_assign as _kmeans_pallas
+from repro.kernels.kmeans import lloyd_step as _lloyd_pallas
 
 
 def _on_tpu() -> bool:
@@ -22,8 +23,36 @@ def kmeans_assign(x, c, *, impl: str = "auto"):
                          and not _on_tpu()):
         # interpret-mode pallas is slow for very large N on CPU
         return REF.kmeans_assign_ref(x, c)
-    labels, _ = _kmeans_pallas(x, c, interpret=not _on_tpu())
+    labels, _ = _kmeans_pallas(x, c)   # interpret probed per backend
     return labels
+
+
+def _lloyd_step_jnp(x, c):
+    """Fused Lloyd step without Pallas: the same MXU-friendly matmul
+    decomposition (||x||^2 - 2 x.c^T + ||c||^2 distances, one-hot^T @ x
+    update) as XLA ops — the fast off-TPU path, and vmap/scan-safe."""
+    x32 = x.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    d = ((x32 * x32).sum(1, keepdims=True) - 2.0 * (x32 @ c32.T)
+         + (c32 * c32).sum(1)[None, :])
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(lab, c.shape[0], dtype=jnp.float32)
+    return lab, d.min(axis=1), onehot.T @ x32, onehot.sum(0)
+
+
+def lloyd_step(x, c, *, impl: str = "auto"):
+    """One fused Lloyd assign+update pass. Returns (labels (N,) int32,
+    min_dist (N,) f32, sums (K, F) f32, counts (K,) f32).
+
+    impl: auto — compiled Pallas on TPU, fused jnp elsewhere (interpret
+    mode pays a per-tile interpreter cost that defeats the fusion on CPU);
+    pallas — force the kernel (interpret probed per backend); ref — the
+    naive (N, K, F)-broadcast oracle."""
+    if impl == "ref":
+        return REF.lloyd_step_ref(x, c)
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return _lloyd_pallas(x, c)     # interpret probed per backend
+    return _lloyd_step_jnp(x, c)
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,

@@ -20,6 +20,18 @@ def kmeans_min_dist_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
     return d.min(axis=1)
 
 
+def lloyd_step_ref(x: jnp.ndarray, c: jnp.ndarray):
+    """Oracle for the fused Lloyd assign+update kernel. x: (N, F),
+    c: (K, F) -> (labels (N,) int32, min_dist (N,) f32, sums (K, F) f32,
+    counts (K,) f32) with sums[k] = sum of rows assigned to centroid k."""
+    x32 = x.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    d = ((x32[:, None, :] - c32[None, :, :]) ** 2).sum(-1)
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(lab, c.shape[0], dtype=jnp.float32)
+    return lab, d.min(axis=1), onehot.T @ x32, onehot.sum(0)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True,
                         window: int = 0) -> jnp.ndarray:
     """q,k,v: (B, S, H, hd) (kv already expanded to H heads)."""

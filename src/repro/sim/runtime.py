@@ -55,8 +55,11 @@ class CohortRuntime(Protocol):
 
     def cluster_features(self, global_params, key,
                          feature_kind: str) -> Optional[jnp.ndarray]:
-        """(N, D) clustering features, or None to use the reference
-        per-client loop in repro.core.clustering."""
+        """(N, D) *raw* clustering features, or None to use the reference
+        per-client loop in repro.core.clustering. Either way the blocked
+        JL projection and the jitted k-means engine run downstream in
+        clustering.cluster_clients, so both runtimes share one code path
+        from raw features onward."""
         ...
 
 

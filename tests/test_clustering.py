@@ -83,6 +83,67 @@ def test_gradient_clustering_groups_clients_by_label():
                 assert lab[a] != lab[b], (a, b, lab)
 
 
+def _blobs(k, n_per, f=16, sep=10.0, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, f)) * sep
+    return jnp.asarray(np.concatenate(
+        [c + 0.5 * rng.normal(size=(n_per, f)) for c in centers]),
+        jnp.float32)
+
+
+@pytest.mark.parametrize("k", [3, 6])
+def test_incremental_kmeanspp_matches_scan(k):
+    """The incremental seeding (running min-distance, O(N·F) per pick)
+    must reproduce the scan version's (N, K, F)-broadcast picks exactly —
+    same key stream, same per-centroid distance math."""
+    feats = jax.random.normal(jax.random.PRNGKey(5), (200, 8))
+    a = CL._kmeanspp_init(feats, k, jax.random.PRNGKey(3))
+    b = CL._kmeanspp_init_scan(feats, k, jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("restarts", [1, 3])
+def test_batched_kmeans_matches_reference_run_for_run(restarts):
+    """The vmapped batched-restart engine must reproduce the per-restart
+    Python-loop reference (same fold_in key stream, same tie rule)."""
+    pts = _blobs(4, 60)
+    key = jax.random.PRNGKey(7)
+    lab_b, cent_b = CL.kmeans(pts, 4, key, restarts=restarts)
+    lab_r, cent_r = CL.kmeans_reference(pts, 4, key, restarts=restarts)
+    np.testing.assert_array_equal(np.asarray(lab_b), np.asarray(lab_r))
+    np.testing.assert_allclose(np.asarray(cent_b), np.asarray(cent_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_impls_agree():
+    """ref (naive broadcast) and the fused auto path pick the same
+    clusters on separated data."""
+    pts = _blobs(5, 40)
+    key = jax.random.PRNGKey(2)
+    lab_a, _ = CL.kmeans(pts, 5, key, impl="auto")
+    lab_r, _ = CL.kmeans(pts, 5, key, impl="ref")
+    np.testing.assert_array_equal(np.asarray(lab_a), np.asarray(lab_r))
+
+
+def test_blocked_projection_separation_and_determinism():
+    """Column-blocked JL projection: deterministic under a fixed key,
+    shape-correct even when in_dim is not a block multiple, and
+    separation-preserving like the dense projection."""
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(20, 5000)) + 5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(20, 5000)) - 5, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    ap = CL.project_features_blocked(key, a, 64, block=1024)
+    bp = CL.project_features_blocked(key, b, 64, block=1024)
+    assert ap.shape == (20, 64)
+    np.testing.assert_array_equal(
+        np.asarray(ap),
+        np.asarray(CL.project_features_blocked(key, a, 64, block=1024)))
+    da = float(jnp.linalg.norm(ap.mean(0) - bp.mean(0)))
+    within = float(jnp.std(ap)) + float(jnp.std(bp))
+    assert da > within
+
+
 def test_random_projection_preserves_separation():
     rng = np.random.default_rng(0)
     a = rng.normal(size=(20, 2000)) + 5

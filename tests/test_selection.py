@@ -89,6 +89,29 @@ def test_depleted_clients_not_selected():
     assert not np.any(np.asarray(win)[dead])
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_per_cluster_matches_loop_oracle(seed):
+    """The segmented-rank pass must pick identical winner sets to the
+    per-cluster argsort loop under a fixed key — including clusters with
+    no eligible member (relaxation) and empty clusters."""
+    cfg = FLConfig(num_clients=57, num_clusters=6, select_ratio=0.2,
+                   scheme="gradient_cluster_random")
+    rng = np.random.default_rng(seed)
+    clusters = rng.integers(0, 6, 57)
+    clusters[clusters == 4] = 0           # leave cluster 4 empty
+    state = SEL.SelectionState(
+        clusters=jnp.asarray(clusters, jnp.int32),
+        residual=jnp.asarray(rng.uniform(50, 100, 57), jnp.float32),
+        history=jnp.zeros((57,), jnp.int32),
+        local_sizes=jnp.asarray(rng.integers(100, 1200, 57), jnp.int32))
+    eligible = jnp.asarray((rng.uniform(size=57) > 0.4)
+                           & (clusters != 2))  # cluster 2: none eligible
+    key = jax.random.PRNGKey(seed)
+    fast = SEL._random_per_cluster(key, state, cfg, eligible)
+    oracle = SEL._random_per_cluster_loop(key, state, cfg, eligible)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(oracle))
+
+
 def test_auction_balances_energy_vs_random():
     """The paper's headline claim (Fig 9/10): auction-based selection yields
     lower residual-energy std than random selection. Simulated without
