@@ -120,20 +120,49 @@ def bench_clustering(quick: bool):
 # ----------------------------------------------------------------------
 
 def bench_selection(quick: bool):
+    """Fused round control plane (repro.core.rounds.simulate_rounds — one
+    lax.scan over T rounds of the full auction/energy dynamics, metrics
+    buffered on device) vs the seed per-round Python path (eager
+    select/reward/update with a host metric fetch every round) across an
+    N sweep. The reference is capped: its per-round dispatch+sync
+    overhead dominates long before N=1M; the fused path alone sweeps to
+    a million clients."""
     from repro.configs.base import FLConfig
-    from repro.core import selection as SEL
-    for n in ([200] if quick else [100, 1000, 10_000]):
+    from repro.core import rounds as R
+    ns = [1000, 10_000] if quick else [10_000, 100_000, 1_000_000]
+    ref_cap = 10_000 if quick else 100_000
+    out = {}
+    for n in ns:
+        T = 16 if quick else (64 if n <= 100_000 else 16)
         cfg = FLConfig(num_clients=n, num_clusters=10, select_ratio=0.1,
-                       scheme="gradient_cluster_auction")
-        rng = np.random.default_rng(0)
-        state = SEL.SelectionState(
-            clusters=jnp.asarray(rng.integers(0, 10, n), jnp.int32),
-            residual=jnp.asarray(rng.uniform(50, 100, n), jnp.float32),
-            history=jnp.zeros((n,), jnp.int32),
-            local_sizes=jnp.asarray(rng.integers(100, 1200, n), jnp.int32))
+                       scheme="gradient_cluster_auction",
+                       init_energy_mode="normal")
         key = jax.random.PRNGKey(0)
-        us = _t(lambda: SEL.select_round(state, cfg, key)[0], n=3, warmup=1)
-        _row(f"auction_select_round_N{n}", us, f"K={int(n*0.1)} J=10")
+        state = R.synthetic_fleet(cfg, key)
+        kr = jax.random.fold_in(key, 1)
+
+        def fused():
+            fs, m, _ = R.simulate_rounds(state, cfg, kr, T)
+            return m["energy_std"]
+
+        us_f = _t(fused, n=2 if n >= 1_000_000 else 3, warmup=1)
+        fused_rps = T / (us_f / 1e6)
+        row = {"N": n, "T": T, "fused_us_per_round": us_f / T,
+               "fused_rounds_per_s": fused_rps}
+        derived = f"T={T} rounds_per_s={fused_rps:.1f}"
+        if n <= ref_cap:
+            us_r = _t(lambda: R.simulate_rounds_reference(
+                state, cfg, kr, T)[1]["energy_std"], n=1, warmup=1)
+            ref_rps = T / (us_r / 1e6)
+            row.update(ref_us_per_round=us_r / T,
+                       ref_rounds_per_s=ref_rps,
+                       speedup=us_r / us_f)
+            _row(f"selection_rounds_ref_N{n}", us_r / T,
+                 f"T={T} rounds_per_s={ref_rps:.1f}")
+            derived += f" speedup={us_r / us_f:.1f}x"
+        _row(f"selection_rounds_fused_N{n}", us_f / T, derived)
+        out[n] = row
+    _save("selection", out)
 
 
 # ----------------------------------------------------------------------

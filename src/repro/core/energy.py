@@ -53,11 +53,30 @@ def round_energy(local_sizes: jnp.ndarray, cfg: FLConfig) -> jnp.ndarray:
 
 def apply_round(residual: jnp.ndarray, selected: jnp.ndarray,
                 local_sizes: jnp.ndarray, cfg: FLConfig) -> jnp.ndarray:
-    """Subtract this round's consumption from selected clients (floored at 0)."""
-    spend = round_energy(local_sizes, cfg) * selected.astype(jnp.float32)
-    return jnp.maximum(residual - spend, 0.0)
+    """Subtract this round's consumption from selected clients (floored at 0).
+
+    The energy term is pinned behind an optimization barrier and applied
+    via a select rather than ``residual - spend * selected``: inside fused
+    programs (lax.scan) XLA contracts the trailing multiply of
+    round_energy with this subtraction into an FMA, which it does not do
+    eagerly — scanned and eager energy trajectories would differ by 1 ulp.
+    The barrier forces the multiply to round first, keeping both paths
+    bit-identical (tests/test_rounds.py equivalence)."""
+    e = jax.lax.optimization_barrier(round_energy(local_sizes, cfg))
+    return jnp.where(selected, jnp.maximum(residual - e, 0.0), residual)
 
 
 def energy_balance(residual: jnp.ndarray) -> jnp.ndarray:
     """The paper's balance metric: std-dev of residual energy (Fig 9/10)."""
     return jnp.std(residual)
+
+
+def energy_stats(residual: jnp.ndarray) -> dict:
+    """On-device fleet energy summary for the fused round control plane
+    (repro.core.rounds): std (the Fig 9/10 balance metric), mean, min —
+    computed inside the round program so logging costs no extra host sync."""
+    return {
+        "energy_std": jnp.std(residual),
+        "energy_mean": jnp.mean(residual),
+        "energy_min": jnp.min(residual),
+    }

@@ -1,0 +1,218 @@
+"""Fused round control plane: the paper's per-round stage-2 pipeline
+(cost -> Nash bids -> s_min -> per-cluster reverse auction -> rewards ->
+energy/history update -> metrics) as ONE compiled program.
+
+Three entry points, all sharing the same round body so they stay
+equivalent by construction:
+
+  * :func:`make_round_step` — a jitted ``(state, key) -> (state, win,
+    metrics)`` step for the live FL loop (FederatedServer.run_round);
+    everything the RoundLog needs (energy std, mean winning bid, reward
+    sums, vds-gap from precomputed per-client label histograms) is
+    computed on device, so the server does at most ONE host transfer for
+    the control plane per round.
+  * :func:`simulate_rounds` — a ``lax.scan``-over-rounds *selection-only*
+    fast path: T rounds of the full auction/energy dynamics run as one
+    compiled program with per-round metrics buffered on device and
+    fetched once.  This is what makes N=100k-1M clients x thousands of
+    rounds tractable for the Fig 9/10-style experiments
+    (``benchmarks/run.py --only selection``; ``launch.train --mode
+    selection``).
+  * :func:`simulate_rounds_reference` — the seed per-round Python path
+    (eager select/update with a host sync per round), kept verbatim as
+    the equivalence oracle and benchmark baseline.  Winner masks, energy
+    trajectories and history are bit-identical with the scan path under
+    the same key stream (tests/test_rounds.py).
+
+The key stream is the seed loop's split chain — ``key, k = split(key)``
+per round — carried through the scan, so the two paths consume identical
+per-round keys.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import auction as A
+from repro.core import energy as E
+from repro.core import selection as SEL
+from repro.core.virtual_dataset import virtual_dataset_gap_device
+
+Metrics = Dict[str, jnp.ndarray]
+
+
+def round_rewards(win: jnp.ndarray, bids: jnp.ndarray,
+                  local_sizes: jnp.ndarray, cfg: FLConfig
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-client rewards + server share under cfg.reward_model (eq 15/16).
+    Zero-winner rounds pay exactly zero on both sides (guards in
+    repro.core.auction)."""
+    if cfg.reward_model == "bid_share":
+        return A.reward_bid_share(win, bids, cfg)
+    return A.reward_sample_share(win, local_sizes, cfg), jnp.float32(0.0)
+
+
+def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
+                count_hists: Optional[jnp.ndarray],
+                global_hist: Optional[jnp.ndarray],
+                winners_impl: str = "segmented"
+                ) -> Tuple[SEL.SelectionState, jnp.ndarray, Metrics]:
+    """One full control-plane round. Pure function of (state, key) —
+    traced identically by the jitted step, the scan path and the eager
+    reference (modulo ``winners_impl``, whose implementations are
+    bit-identical), which is what makes the three bit-comparable."""
+    win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl)
+    bids = info["bids"]
+    client_r, server_r = round_rewards(win, bids, state.local_sizes, cfg)
+    new_state = SEL.update_after_round(state, win, cfg)
+
+    nwin = win.sum()
+    winning_bids = jnp.where(win, bids, 0.0)
+    metrics: Metrics = {
+        "num_winners": nwin,
+        "mean_bid": jnp.where(
+            nwin > 0, winning_bids.sum() / jnp.maximum(nwin, 1), 0.0),
+        "client_reward_sum": client_r.sum(),
+        "server_reward": jnp.asarray(server_r, jnp.float32),
+        "s_min": jnp.asarray(info.get("s_min", 0), jnp.int32),
+        "vds_gap": (virtual_dataset_gap_device(win, count_hists, global_hist)
+                    if count_hists is not None else jnp.float32(0.0)),
+    }
+    metrics.update(E.energy_stats(new_state.residual))
+    return new_state, win, metrics
+
+
+@partial(jax.jit, static_argnames=("cfg", "winners_impl"))
+def _round_step_jit(state: SEL.SelectionState, key, count_hists, global_hist,
+                    cfg: FLConfig, winners_impl: str):
+    return _round_body(state, key, cfg, count_hists, global_hist,
+                       winners_impl)
+
+
+def make_round_step(cfg: FLConfig,
+                    count_hists: Optional[np.ndarray] = None,
+                    global_hist: Optional[np.ndarray] = None,
+                    winners_impl: str = "segmented"):
+    """Compile one ``(state, key) -> (new_state, win, metrics)`` round
+    program for the live FL loop. ``count_hists`` is the (N, num_classes)
+    per-client label-count matrix (virtual_dataset.client_count_histograms);
+    with it the vds-gap is computed on device, otherwise it logs 0."""
+    ch = None if count_hists is None else jnp.asarray(count_hists,
+                                                      jnp.float32)
+    gh = None if global_hist is None else jnp.asarray(global_hist,
+                                                      jnp.float32)
+
+    def round_step(state: SEL.SelectionState, key):
+        return _round_step_jit(state, key, ch, gh, cfg, winners_impl)
+
+    return round_step
+
+
+# ----------------------------------------------------------------------
+# scan-over-rounds selection-only simulation
+# ----------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg", "rounds", "record_wins"))
+def _simulate_scan(state: SEL.SelectionState, key, count_hists, global_hist,
+                   cfg: FLConfig, rounds: int, record_wins: bool):
+    def body(carry, _):
+        state, key = carry
+        key, k = jax.random.split(key)           # the seed loop's chain
+        new_state, win, metrics = _round_body(state, k, cfg, count_hists,
+                                              global_hist)
+        out = (win, metrics) if record_wins else metrics
+        return (new_state, key), out
+
+    (final_state, _), ys = jax.lax.scan(body, (state, key), None,
+                                        length=rounds)
+    if record_wins:
+        wins, metrics = ys
+        return final_state, metrics, wins
+    return final_state, ys, None
+
+
+def simulate_rounds(state: SEL.SelectionState, cfg: FLConfig, key,
+                    rounds: int,
+                    count_hists: Optional[np.ndarray] = None,
+                    global_hist: Optional[np.ndarray] = None,
+                    record_wins: bool = False):
+    """Run ``rounds`` rounds of the full selection/auction/energy dynamics
+    as ONE compiled lax.scan program (no stage-3 training — the
+    selection-only fast path for Fig 9/10-style experiments).
+
+    Returns ``(final_state, metrics, wins)`` where ``metrics`` maps each
+    round metric to a ``(rounds,)`` device buffer (fetch once with
+    ``jax.device_get``) and ``wins`` is the ``(rounds, N)`` bool winner
+    masks when ``record_wins`` (default off — at N=1M x T=1k that buffer
+    alone is 1 GB; metrics are a few scalars per round regardless of N).
+    """
+    ch = None if count_hists is None else jnp.asarray(count_hists,
+                                                      jnp.float32)
+    gh = None if global_hist is None else jnp.asarray(global_hist,
+                                                      jnp.float32)
+    return _simulate_scan(state, key, ch, gh, cfg, int(rounds),
+                          bool(record_wins))
+
+
+def simulate_rounds_reference(state: SEL.SelectionState, cfg: FLConfig, key,
+                              rounds: int,
+                              count_hists: Optional[np.ndarray] = None,
+                              global_hist: Optional[np.ndarray] = None,
+                              record_wins: bool = False):
+    """The seed per-round Python path: one round dispatched at a time
+    using the per-cluster argsort loop (``winners_impl="loop"``, the seed
+    auction implementation) with the per-round host syncs the pre-fusion
+    server paid (metrics pulled every round). The step itself is jitted —
+    XLA's algebraic simplifier rewrites float expressions under jit (e.g.
+    ``x * rho / 100``), so a fully-eager loop could never bit-match a
+    compiled path; jitting the step keeps the comparison about *fusion
+    across rounds*, and keeps this the exact-equality oracle. Same
+    signature and return shape as :func:`simulate_rounds`; also the
+    baseline the ``--only selection`` benchmark measures the fused path
+    over."""
+    ch = None if count_hists is None else jnp.asarray(count_hists,
+                                                      jnp.float32)
+    gh = None if global_hist is None else jnp.asarray(global_hist,
+                                                      jnp.float32)
+    wins, metric_rows = [], []
+    for _ in range(int(rounds)):
+        key, k = jax.random.split(key)
+        state, win, metrics = _round_step_jit(state, k, ch, gh, cfg, "loop")
+        metric_rows.append(jax.device_get(metrics))   # per-round host sync
+        if record_wins:
+            wins.append(np.asarray(win))
+    metrics_np = {name: np.stack([m[name] for m in metric_rows])
+                  for name in metric_rows[0]} if metric_rows else {}
+    if not record_wins:
+        return state, metrics_np, None
+    wins_np = (np.stack(wins) if wins
+               else np.zeros((0, state.clusters.shape[0]), bool))
+    return state, metrics_np, wins_np
+
+
+# ----------------------------------------------------------------------
+# synthetic fleets (million-client states without a dataset)
+# ----------------------------------------------------------------------
+
+def synthetic_fleet(cfg: FLConfig, key, size_low: int = 100,
+                    size_high: int = 1200) -> SEL.SelectionState:
+    """A SelectionState for selection-only experiments at arbitrary N:
+    uniform random cluster ids, Table-I-style local sizes in
+    [size_low, size_high] (the paper's MNIST imbalance range at N=100),
+    initial energy per cfg.init_energy_mode. Built entirely on device —
+    no dataset or partitioning pass, so N=1M costs ~16 MB of state."""
+    k_cl, k_en, k_sz = jax.random.split(key, 3)
+    n = cfg.num_clients
+    return SEL.SelectionState(
+        clusters=jax.random.randint(k_cl, (n,), 0, cfg.num_clusters,
+                                    jnp.int32),
+        residual=E.init_energy(cfg, k_en),
+        history=jnp.zeros((n,), jnp.int32),
+        local_sizes=jax.random.randint(k_sz, (n,), size_low, size_high + 1,
+                                       jnp.int32),
+    )

@@ -25,12 +25,23 @@ from repro.core import energy as E
 
 @dataclass
 class SelectionState:
-    """Struct-of-arrays client state used by the selector."""
+    """Struct-of-arrays client state used by the selector.
+
+    Registered as a pytree (all fields are array leaves) so whole states
+    flow through jit / lax.scan — the fused round control plane
+    (repro.core.rounds) carries a SelectionState across rounds on device.
+    """
 
     clusters: jnp.ndarray        # (N,) int32 cluster id (0 for 'random')
     residual: jnp.ndarray        # (N,) float32 energy percent
     history: jnp.ndarray         # (N,) int32 participation rounds so far
     local_sizes: jnp.ndarray     # (N,) int32 |xi_k|
+
+
+jax.tree_util.register_dataclass(
+    SelectionState,
+    data_fields=["clusters", "residual", "history", "local_sizes"],
+    meta_fields=[])
 
 
 def k_per_cluster(cfg: FLConfig) -> int:
@@ -77,9 +88,7 @@ def _random_per_cluster(key, state: SelectionState, cfg: FLConfig,
     e = jnp.where(has_elig[cl] > 0, eligible, True)
     keyed = jnp.where(e, noise, 2.0)     # ineligible sort after all noise
     order = jnp.lexsort((keyed, cl))     # cluster-major, noise-minor
-    sizes = jnp.zeros((nj,), jnp.int32).at[cl].add(1)
-    starts = jnp.cumsum(sizes) - sizes   # segment offsets in sorted order
-    rank_in_cluster = jnp.arange(n) - starts[cl[order]]
+    rank_in_cluster = A.segment_ranks(order, cl, nj)
     win_sorted = (rank_in_cluster < kj) & e[order]
     return jnp.zeros((n,), bool).at[order].set(win_sorted)
 
@@ -103,9 +112,15 @@ def _random_per_cluster_loop(key, state: SelectionState, cfg: FLConfig,
     return win
 
 
-def select_round(state: SelectionState, cfg: FLConfig, key
+def select_round(state: SelectionState, cfg: FLConfig, key,
+                 winners_impl: str = "segmented"
                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Run one round of selection. Returns (winner mask (N,) bool, info)."""
+    """Run one round of selection. Returns (winner mask (N,) bool, info).
+    ``winners_impl`` picks the per-cluster auction implementation
+    (auction.cluster_winners): ``segmented`` fused top-k (default) or
+    ``loop``, the seed per-cluster argsort oracle — bit-identical winner
+    sets, kept selectable for regression tests and as the benchmark
+    baseline."""
     n = cfg.num_clients
     k_total = max(int(round(cfg.select_ratio * n)), 1)
     keys = jax.random.split(key, 4)
@@ -137,7 +152,8 @@ def select_round(state: SelectionState, cfg: FLConfig, key
     # step 2: per-cluster reverse auction among eligible clients
     cs = A.service_cost(state.local_sizes, state.history, cfg)
     win = A.cluster_winners(bids, state.clusters, eligible, kj,
-                            cfg.num_clusters, tie_break=cs)
+                            cfg.num_clusters, tie_break=cs,
+                            impl=winners_impl)
     info.update(bids=bids, costs=c, s_min=smin,
                 revenue=A.revenue(bids, c, win))
     return win, info

@@ -2,7 +2,10 @@
 
 Stage 1  (once)    : gradient/weight clustering of all clients.
 Stage 2  (per round): cost -> Nash bids -> s_min threshold -> per-cluster
-                      winners (or the paper's baselines' random picks).
+                      winners (or the paper's baselines' random picks),
+                      rewards, energy/history update and round metrics —
+                      fused into ONE jitted program per round
+                      (repro.core.rounds), one host transfer for logging.
 Stage 3  (per round): winners run I local epochs (FedAvg local SGD, or
                       FedProx with the proximal term), server aggregates
                       w_{t+1} = sum_k p_k w^k_{t+1}, energy/history update.
@@ -27,9 +30,9 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core import clustering as CL
 from repro.core import energy as EN
+from repro.core import rounds as RND
 from repro.core import selection as SEL
 from repro.core.adapters import ModelAdapter
-from repro.core.auction import reward_bid_share, reward_sample_share
 from repro.optim import apply_updates, sgd
 from repro.sim.runtime import make_runtime
 
@@ -70,11 +73,23 @@ class FederatedServer:
             history=jnp.zeros((cfg.num_clients,), jnp.int32),
             local_sizes=sizes,
         )
-        from repro.data.partition import global_histogram, \
-            client_label_histograms
+        from repro.core.virtual_dataset import client_count_histograms
+        from repro.data.partition import global_histogram
         self.global_hist = global_histogram(y, cfg.num_classes)
         self.client_labels = [y[c.train_idx] for c in clients]
         self.total_client_reward = 0.0
+        # fused round control plane: one jitted (state, key) -> (state,
+        # win, metrics) program; metrics (energy std, mean winning bid,
+        # reward sums, vds-gap) are computed on device so run_round does
+        # one host transfer for the whole control plane.
+        self._round_step = RND.make_round_step(
+            cfg, client_count_histograms(self.client_labels,
+                                         cfg.num_classes),
+            self.global_hist)
+        # host mirror of participation counts: stage-3 shuffle seeding
+        # reads history per winner, which on the device array cost one
+        # int(history[i]) sync per client per round.
+        self._host_history = np.zeros((cfg.num_clients,), np.int64)
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -127,47 +142,42 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def local_train(self, client_idx: int, global_params):
         return self.runtime.train_client(
-            global_params, client_idx, int(self.state.history[client_idx]))
+            global_params, client_idx, int(self._host_history[client_idx]))
 
     # ------------------------------------------------------------------
     def run_round(self, t: int) -> RoundLog:
+        """One FL round. The whole stage-2 control plane (selection,
+        rewards, energy/history update, round metrics) is one jitted call
+        (repro.core.rounds.make_round_step); the winner mask and metric
+        scalars come back in a single host transfer, stage-3 training then
+        overlaps the already-dispatched state update."""
         cfg = self.cfg
-        win, info = SEL.select_round(self.state, cfg, self._next_key())
-        win_np = np.asarray(win)
+        new_state, win, metrics = self._round_step(self.state,
+                                                   self._next_key())
+        win_np, m = jax.device_get((win, metrics))
         sel_idx = np.nonzero(win_np)[0]
 
-        # stage 3: local training + aggregation (cohort runtime backend)
+        # stage 3: local training + aggregation (cohort runtime backend);
+        # shuffle seeds read the pre-round host history mirror
         new_params = self.runtime.train_cohort(
-            self.params, sel_idx, np.asarray(self.state.history))
+            self.params, sel_idx, self._host_history)
         if new_params is not None:
             self.params = new_params
 
-        # rewards
-        if cfg.reward_model == "bid_share" and "bids" in info:
-            cr, server_r = reward_bid_share(win, info["bids"], cfg)
-        else:
-            cr = reward_sample_share(win, self.state.local_sizes, cfg)
-            server_r = 0.0
-        self.total_client_reward += float(jnp.sum(cr))
+        self.state = new_state
+        self._host_history[sel_idx] += 1
+        self.total_client_reward += float(m["client_reward_sum"])
 
-        # energy / history
-        self.state = SEL.update_after_round(self.state, win, cfg)
-
-        # evaluation
+        # evaluation (model quality — the only other host fetches)
         acc = float(self.adapter.accuracy(self.params, self.test_batch))
         loss = float(self.adapter.loss(self.params, self.test_batch))
-        from repro.core.virtual_dataset import virtual_dataset_gap
-        gap = virtual_dataset_gap(self.client_labels, win_np,
-                                  self.global_hist, cfg.num_classes)
-        bids = info.get("bids")
-        finite = np.asarray(bids)[win_np] if bids is not None else np.zeros(1)
         log = RoundLog(
             round=t, selected=sel_idx, test_acc=acc, test_loss=loss,
-            energy_std=float(EN.energy_balance(self.state.residual)),
-            mean_bid=float(np.mean(finite)) if finite.size else 0.0,
-            server_reward=float(server_r),
-            client_reward_sum=float(jnp.sum(cr)),
-            vds_gap=gap)
+            energy_std=float(m["energy_std"]),
+            mean_bid=float(m["mean_bid"]),
+            server_reward=float(m["server_reward"]),
+            client_reward_sum=float(m["client_reward_sum"]),
+            vds_gap=float(m["vds_gap"]))
         self.logs.append(log)
         return log
 

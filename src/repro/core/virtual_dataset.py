@@ -48,3 +48,33 @@ def virtual_dataset_gap(client_labels, selected, global_hist,
 def virtual_dataset_size(client_sizes: np.ndarray,
                          selected: np.ndarray) -> int:
     return int((client_sizes * selected).sum())
+
+
+# ----------------------------------------------------------------------
+# device-side round metrics (repro.core.rounds)
+# ----------------------------------------------------------------------
+
+def client_count_histograms(client_labels: Sequence[np.ndarray],
+                            num_classes: int) -> np.ndarray:
+    """(N, num_classes) per-client label *counts* (not normalized) —
+    precomputed once on host so the per-round vds-gap reduces to one
+    masked matvec on device."""
+    h = np.zeros((len(client_labels), num_classes), np.float32)
+    for i, lab in enumerate(client_labels):
+        np.add.at(h[i], np.asarray(lab), 1.0)
+    return h
+
+
+def virtual_dataset_gap_device(selected: jnp.ndarray,
+                               count_hists: jnp.ndarray,
+                               global_hist: jnp.ndarray) -> jnp.ndarray:
+    """Jit-friendly twin of :func:`virtual_dataset_gap`: xi_t's label
+    histogram is the winner-masked sum of precomputed per-client counts
+    (one (N,) @ (N, C) matvec — counts are integer-valued floats, so the
+    sum matches the concatenate-then-histogram host path exactly). Empty
+    rounds fall back to the uniform histogram, as the host path does."""
+    h = selected.astype(jnp.float32) @ count_hists          # (C,)
+    num_classes = count_hists.shape[1]
+    hist = jnp.where(selected.any(), h / jnp.maximum(h.sum(), 1.0),
+                     1.0 / num_classes)
+    return tv_distance(hist, global_hist)

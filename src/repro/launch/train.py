@@ -1,6 +1,6 @@
 """FL training driver.
 
-Two modes:
+Three modes:
 
   * ``--mode paper`` (default): the paper-faithful simulation — N edge
     clients with CNNs on a synthetic non-IID/imbalanced image dataset,
@@ -11,6 +11,13 @@ Two modes:
     on CPU; the full configs are exercised by the dry-run). Clients hold
     topic-conditional token shards; one FL round = selection -> local LM
     steps -> weighted aggregation.
+
+  * ``--mode selection``: selection-only simulation — the full per-round
+    auction/energy dynamics (cost, Nash bids, s_min, per-cluster reverse
+    auction, rewards, energy/history) WITHOUT stage-3 training, run as one
+    lax.scan-over-rounds compiled program (repro.core.rounds.simulate_rounds)
+    over a synthetic fleet. This is the Fig 9/10-style experiment engine at
+    scale: N=100k-1M clients x thousands of rounds on a laptop.
 
 Cohort execution backend (``--runtime``, see repro/sim/):
 
@@ -34,6 +41,8 @@ Usage:
       --runtime vectorized --clients 200 --rounds 30
   PYTHONPATH=src python -m repro.launch.train --mode transformer \
       --arch qwen2-0.5b --rounds 3
+  PYTHONPATH=src python -m repro.launch.train --mode selection \
+      --clients 1000000 --clusters 100 --rounds 1000
 """
 from __future__ import annotations
 
@@ -117,10 +126,49 @@ def run_transformer(args) -> dict:
     }
 
 
+def run_selection(args) -> dict:
+    """Selection-only round dynamics at scale: one compiled scan over all
+    rounds, metrics buffered on device and fetched once at the end."""
+    import jax.numpy as jnp
+
+    from repro.core import rounds as R
+    cfg = FLConfig(
+        num_clients=args.clients, num_clusters=args.clusters,
+        select_ratio=args.select_ratio, rounds=args.rounds,
+        scheme=args.scheme, init_energy_mode=args.energy_mode,
+        seed=args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    state = R.synthetic_fleet(cfg, key)
+    t0 = time.time()
+    final, metrics, _ = R.simulate_rounds(state, cfg,
+                                          jax.random.fold_in(key, 1),
+                                          args.rounds)
+    metrics = jax.device_get(metrics)      # ONE host transfer for T rounds
+    wall = time.time() - t0
+    out = {
+        "mode": "selection", "scheme": args.scheme,
+        "clients": args.clients, "clusters": args.clusters,
+        "rounds": list(range(args.rounds)),
+        "energy_std": [float(v) for v in metrics["energy_std"]],
+        "mean_bid": [float(v) for v in metrics["mean_bid"]],
+        "server_reward": [float(v) for v in metrics["server_reward"]],
+        "client_reward_sum": [float(v)
+                              for v in metrics["client_reward_sum"]],
+        "num_winners": [int(v) for v in metrics["num_winners"]],
+        "final_energy_mean": float(jnp.mean(final.residual)),
+        "rounds_per_s": args.rounds / wall,
+        "wall_s": wall,
+    }
+    print(f"selection-only: N={args.clients} T={args.rounds} "
+          f"{out['rounds_per_s']:.1f} rounds/s (incl. compile) "
+          f"final_energy_std={out['energy_std'][-1]:.3f}")
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="paper",
-                    choices=["paper", "transformer"])
+                    choices=["paper", "transformer", "selection"])
     ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--dataset", default="mnist",
                     choices=["mnist", "fmnist", "cifar"])
@@ -147,7 +195,8 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    result = run_paper(args) if args.mode == "paper" else run_transformer(args)
+    result = {"paper": run_paper, "transformer": run_transformer,
+              "selection": run_selection}[args.mode](args)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -45,7 +45,10 @@ class CohortRuntime(Protocol):
     def train_cohort(self, global_params, sel_idx: np.ndarray,
                      history: np.ndarray) -> Optional[Any]:
         """Run local training for the winners and return the aggregated
-        global params (None for an empty cohort)."""
+        global params (None for an empty cohort). ``history`` is a HOST
+        array (the server's participation mirror) — per-winner shuffle
+        seeds index it directly, so the control plane never pays a
+        per-client device sync for rng seeding."""
         ...
 
     def train_client(self, global_params, client_idx: int,
@@ -110,6 +113,7 @@ class SequentialRuntime:
 
     def train_cohort(self, global_params, sel_idx, history):
         sel_idx = np.asarray(sel_idx)
+        history = np.asarray(history)       # host mirror; never a jnp sync
         if sel_idx.size == 0:
             return None
         locals_ = [self.train_client(global_params, int(i),

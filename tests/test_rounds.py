@@ -1,0 +1,276 @@
+"""Fused round control plane tests (repro.core.rounds + auction winner
+selection): segmented cluster_winners vs the per-cluster loop oracle,
+lexicographic tie-breaking, zero-winner reward guards, and scan-path vs
+seed per-round-path equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import auction as A
+from repro.core import rounds as R
+from repro.core import selection as SEL
+
+
+# ----------------------------------------------------------------------
+# segmented cluster_winners vs the loop oracle (bit-for-bit)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_cluster_winners_segmented_matches_loop(seed):
+    """Randomized fleets (empty clusters, ineligible members, continuous
+    bids), with and without a tie-break key: the single-lexsort segmented
+    implementation must pick bit-identical winner sets to the seed
+    per-cluster argsort loop."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(5, 400))
+    num_clusters = int(rng.integers(1, 9))
+    kj = int(rng.integers(1, 9))
+    clusters = rng.integers(0, num_clusters, n)
+    if num_clusters > 2:
+        clusters[clusters == 1] = 0          # leave cluster 1 empty
+    clusters = jnp.asarray(clusters, jnp.int32)
+    bids = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    eligible = jnp.asarray(rng.uniform(size=n) > 0.35)
+    tb = jnp.asarray(rng.uniform(0, 1, n), jnp.float32)
+    for tie in (None, tb):
+        w_loop = np.asarray(A.cluster_winners_loop(
+            bids, clusters, eligible, kj, num_clusters, tie))
+        w_seg = np.asarray(A.cluster_winners(
+            bids, clusters, eligible, kj, num_clusters, tie,
+            impl="segmented"))
+        np.testing.assert_array_equal(w_seg, w_loop)
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12])
+def test_cluster_winners_tie_heavy_matches_loop(seed):
+    """Quantized bids and tie-breaks force exact float ties at the K_j
+    boundary — both implementations must resolve them identically
+    (stable sort order: bid, then tie-break, then client index)."""
+    rng = np.random.default_rng(seed)
+    n, num_clusters, kj = 120, 5, 4
+    clusters = jnp.asarray(rng.integers(0, num_clusters, n), jnp.int32)
+    bids = jnp.asarray(rng.choice([0.1, 0.3, 0.3, 0.3, 0.5], n), jnp.float32)
+    eligible = jnp.asarray(rng.uniform(size=n) > 0.25)
+    tb = jnp.asarray(rng.choice([0.0, 0.2, 0.2, 0.7], n), jnp.float32)
+    w_loop = np.asarray(A.cluster_winners_loop(
+        bids, clusters, eligible, kj, num_clusters, tb))
+    w_seg = np.asarray(A.cluster_winners(
+        bids, clusters, eligible, kj, num_clusters, tb))
+    np.testing.assert_array_equal(w_seg, w_loop)
+
+
+def test_select_lowest_bids_lexicographic_tiebreak():
+    """Regression (ISSUE 3 satellite): distinct bids closer than the old
+    additive 1e-6 epsilon must be ordered by bid alone — the tie-break is
+    consulted only on exactly-equal bids."""
+    # client 0 has the strictly lowest bid but the *largest* tie-break;
+    # the old `bids + 1e-6 * tie` composite key would have flipped it.
+    bids = jnp.asarray([0.5, 0.5 + 2e-7, 0.9], jnp.float32)
+    assert float(bids[0]) < float(bids[1])           # distinct in f32
+    tie = jnp.asarray([1.0, 0.0, 0.0], jnp.float32)
+    eligible = jnp.ones((3,), bool)
+    win = np.asarray(A.select_lowest_bids(bids, eligible, 1, tie))
+    np.testing.assert_array_equal(win, [True, False, False])
+    # on exactly-equal bids the tie-break decides
+    bids_eq = jnp.asarray([0.5, 0.5, 0.9], jnp.float32)
+    tie_eq = jnp.asarray([0.7, 0.2, 0.0], jnp.float32)
+    win_eq = np.asarray(A.select_lowest_bids(bids_eq, eligible, 1, tie_eq))
+    np.testing.assert_array_equal(win_eq, [False, True, False])
+
+
+def test_select_lowest_bids_topk_matches_argsort_path():
+    """The no-tie-break top_k fast path must equal the sort-based
+    definition (lax.top_k prefers lower indices on ties, like a stable
+    argsort)."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        n = int(rng.integers(4, 200))
+        k = int(rng.integers(1, 12))
+        bids = jnp.asarray(rng.choice([0.1, 0.4, 0.4, 0.8], n), jnp.float32)
+        eligible = jnp.asarray(rng.uniform(size=n) > 0.3)
+        win = np.asarray(A.select_lowest_bids(bids, eligible, k))
+        # sort-based reference: zero tie-break == pure stable bid order
+        ref = np.asarray(A.select_lowest_bids(
+            bids, eligible, k, jnp.zeros((n,), jnp.float32)))
+        np.testing.assert_array_equal(win, ref)
+
+
+# ----------------------------------------------------------------------
+# zero-winner reward guards
+# ----------------------------------------------------------------------
+
+def test_zero_winner_rewards_are_exactly_zero():
+    cfg = FLConfig()
+    n = 16
+    won = jnp.zeros((n,), bool)
+    sizes = jnp.full((n,), 500, jnp.int32)
+    bids = jnp.asarray(np.random.default_rng(0).uniform(0, 1, n), jnp.float32)
+    r15 = np.asarray(A.reward_sample_share(won, sizes, cfg))
+    assert np.all(r15 == 0.0) and np.all(np.isfinite(r15))
+    r16, server = A.reward_bid_share(won, bids, cfg)
+    assert np.all(np.asarray(r16) == 0.0)
+    assert float(server) == 0.0 and np.isfinite(float(server))
+
+
+def test_depleted_fleet_round_has_no_winners_and_zero_rewards():
+    """A fully-depleted fleet (every Cr = inf) is the reachable zero-winner
+    round: the fused step must log zero winners, zero rewards, and finite
+    metrics — no NaNs."""
+    cfg = FLConfig(num_clients=24, num_clusters=4, select_ratio=0.25,
+                   scheme="gradient_cluster_auction")
+    rng = np.random.default_rng(0)
+    state = SEL.SelectionState(
+        clusters=jnp.asarray(rng.integers(0, 4, 24), jnp.int32),
+        residual=jnp.full((24,), 0.01, jnp.float32),    # can't afford a round
+        history=jnp.zeros((24,), jnp.int32),
+        local_sizes=jnp.asarray(rng.integers(100, 1200, 24), jnp.int32))
+    step = R.make_round_step(cfg)
+    _, win, metrics = step(state, jax.random.PRNGKey(0))
+    m = jax.device_get(metrics)
+    assert not np.asarray(win).any()
+    assert int(m["num_winners"]) == 0
+    assert float(m["client_reward_sum"]) == 0.0
+    assert float(m["server_reward"]) == 0.0
+    assert float(m["mean_bid"]) == 0.0
+    for v in m.values():
+        assert np.all(np.isfinite(np.asarray(v, np.float64)))
+
+
+# ----------------------------------------------------------------------
+# scan path vs seed per-round path
+# ----------------------------------------------------------------------
+
+def _make_state(cfg, seed=0):
+    return R.synthetic_fleet(cfg, jax.random.PRNGKey(seed))
+
+
+@pytest.mark.parametrize("scheme", [
+    "gradient_cluster_auction", "gradient_cluster_random", "random"])
+def test_simulate_rounds_matches_reference(scheme):
+    """simulate_rounds (one lax.scan program, segmented winners) vs the
+    seed per-round Python path (eager rounds, per-cluster argsort loop):
+    bit-identical winner masks, energy trajectories and history under the
+    same key stream."""
+    cfg = FLConfig(num_clients=60, num_clusters=6, select_ratio=0.2,
+                   scheme=scheme, init_energy_mode="normal")
+    state = _make_state(cfg, seed=1)
+    key = jax.random.PRNGKey(123)
+    T = 10
+    fs, m, wins = R.simulate_rounds(state, cfg, key, T, record_wins=True)
+    fs_r, m_r, wins_r = R.simulate_rounds_reference(state, cfg, key, T,
+                                                    record_wins=True)
+    np.testing.assert_array_equal(np.asarray(wins), wins_r)
+    np.testing.assert_array_equal(np.asarray(fs.residual),
+                                  np.asarray(fs_r.residual))
+    np.testing.assert_array_equal(np.asarray(fs.history),
+                                  np.asarray(fs_r.history))
+    # per-round energy trajectory, elementwise-exact; other metrics may
+    # differ by float reassociation under fusion (e.g. std) — allclose
+    for name in m:
+        np.testing.assert_allclose(
+            np.asarray(m[name], np.float64),
+            np.asarray(m_r[name], np.float64), rtol=1e-5, atol=1e-5,
+            err_msg=name)
+    np.testing.assert_array_equal(np.asarray(m["num_winners"]),
+                                  m_r["num_winners"])
+
+
+def test_simulate_rounds_metrics_shapes_and_history():
+    cfg = FLConfig(num_clients=40, num_clusters=4, select_ratio=0.2,
+                   scheme="gradient_cluster_auction",
+                   init_energy_mode="normal")
+    state = _make_state(cfg)
+    T = 7
+    fs, m, wins = R.simulate_rounds(state, cfg, jax.random.PRNGKey(5), T,
+                                    record_wins=True)
+    assert all(np.asarray(v).shape[0] == T for v in m.values())
+    assert np.asarray(wins).shape == (T, 40)
+    # history counts participation exactly
+    np.testing.assert_array_equal(
+        np.asarray(fs.history),
+        np.asarray(wins).sum(axis=0).astype(np.int32))
+    # energy never increases
+    assert np.all(np.asarray(fs.residual) <= np.asarray(state.residual))
+
+
+def test_round_step_matches_eager_pipeline():
+    """make_round_step (one jitted program) must reproduce the eager
+    select_round -> rewards -> update_after_round pipeline the server ran
+    before fusion."""
+    cfg = FLConfig(num_clients=50, num_clusters=5, select_ratio=0.2,
+                   scheme="gradient_cluster_auction",
+                   init_energy_mode="normal")
+    state = _make_state(cfg, seed=2)
+    key = jax.random.PRNGKey(9)
+    step = R.make_round_step(cfg)
+    new_state, win, metrics = step(state, key)
+
+    win_e, info = SEL.select_round(state, cfg, key)
+    cr, server_r = A.reward_bid_share(win_e, info["bids"], cfg)
+    state_e = SEL.update_after_round(state, win_e, cfg)
+    np.testing.assert_array_equal(np.asarray(win), np.asarray(win_e))
+    np.testing.assert_array_equal(np.asarray(new_state.residual),
+                                  np.asarray(state_e.residual))
+    np.testing.assert_allclose(float(metrics["client_reward_sum"]),
+                               float(cr.sum()), rtol=1e-6)
+    np.testing.assert_allclose(float(metrics["server_reward"]),
+                               float(server_r), rtol=1e-6)
+
+
+def test_vds_gap_device_matches_host():
+    from repro.core.virtual_dataset import (client_count_histograms,
+                                            virtual_dataset_gap,
+                                            virtual_dataset_gap_device)
+    rng = np.random.default_rng(0)
+    n_clients, num_classes = 30, 10
+    labels = [rng.integers(0, num_classes, rng.integers(20, 200))
+              for _ in range(n_clients)]
+    counts = client_count_histograms(labels, num_classes)
+    global_hist = np.ones((num_classes,)) / num_classes
+    for sel_seed in range(4):
+        sel = rng.uniform(size=n_clients) > 0.6
+        host = virtual_dataset_gap(labels, sel, global_hist, num_classes)
+        dev = float(virtual_dataset_gap_device(
+            jnp.asarray(sel), jnp.asarray(counts), jnp.asarray(global_hist)))
+        np.testing.assert_allclose(dev, host, atol=1e-6)
+    # empty selection falls back to the uniform histogram on both paths
+    empty = np.zeros((n_clients,), bool)
+    host = virtual_dataset_gap(labels, empty, global_hist, num_classes)
+    dev = float(virtual_dataset_gap_device(
+        jnp.asarray(empty), jnp.asarray(counts), jnp.asarray(global_hist)))
+    np.testing.assert_allclose(dev, host, atol=1e-6)
+
+
+def test_simulate_rounds_winner_invariants_property():
+    """Property test (hypothesis, optional): across simulated rounds every
+    winner is eligible (affordable + above s_min) and each cluster stays
+    within its K_j cap."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the optional hypothesis extra")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @given(seed=st.integers(0, 100))
+    @settings(max_examples=10, deadline=None)
+    def run(seed):
+        cfg = FLConfig(num_clients=48, num_clusters=4, select_ratio=0.25,
+                       scheme="gradient_cluster_auction",
+                       init_energy_mode="normal")
+        state = _make_state(cfg, seed=seed)
+        T = 6
+        _, m, wins = R.simulate_rounds(state, cfg, jax.random.PRNGKey(seed),
+                                       T, record_wins=True)
+        wins = np.asarray(wins)
+        clusters = np.asarray(state.clusters)
+        kj = SEL.k_per_cluster(cfg)
+        sizes = np.asarray(state.local_sizes)
+        smin = np.asarray(m["s_min"])
+        for t in range(T):
+            for j in range(cfg.num_clusters):
+                assert wins[t][clusters == j].sum() <= kj
+            assert np.all(sizes[wins[t]] >= smin[t])
+
+    run()
