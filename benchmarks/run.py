@@ -145,11 +145,18 @@ def bench_selection(quick: bool):
             fs, m, _ = R.simulate_rounds(state, cfg, kr, T)
             return m["energy_std"]
 
-        us_f = _t(fused, n=2 if n >= 1_000_000 else 3, warmup=1)
+        # time the cold (compile+run) call separately so the reported
+        # rounds/s is the warm throughput and compile cost is its own row
+        t0 = time.time()
+        jax.block_until_ready(fused())
+        cold_s = time.time() - t0
+        us_f = _t(fused, n=2 if n >= 1_000_000 else 3, warmup=0)
+        compile_s = max(cold_s - us_f / 1e6, 0.0)
         fused_rps = T / (us_f / 1e6)
         row = {"N": n, "T": T, "fused_us_per_round": us_f / T,
-               "fused_rounds_per_s": fused_rps}
-        derived = f"T={T} rounds_per_s={fused_rps:.1f}"
+               "fused_rounds_per_s": fused_rps, "compile_s": compile_s}
+        derived = f"T={T} rounds_per_s={fused_rps:.1f} " \
+                  f"compile_s={compile_s:.2f}"
         if n <= ref_cap:
             us_r = _t(lambda: R.simulate_rounds_reference(
                 state, cfg, kr, T)[1]["energy_std"], n=1, warmup=1)
@@ -210,6 +217,65 @@ def bench_cohort_engine(quick: bool):
         _row(f"cohort_engine_vec_C{c}", us_v, f"speedup={speedup:.2f}x")
         out[c] = {"seq_us": us_s, "vec_us": us_v, "speedup": speedup}
     _save("cohort_engine", out)
+
+
+# ----------------------------------------------------------------------
+# micro: sharded cohort runtime (repro.sim, mesh-mapped stage-3)
+# ----------------------------------------------------------------------
+
+def bench_cohort_sharded(quick: bool):
+    """Vectorized (1-device) vs sharded (mesh-mapped) cohort training on
+    whatever devices this process sees.  On a plain host the cohort mesh
+    degrades to 1 device (the bench then measures shard_map overhead);
+    CI runs it under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    to exercise the real 8-way client-axis split + psum reduction.  Every
+    row also checks the sharded aggregate against the vectorized one
+    (same float-reassociation tolerance class as tests/test_sim.py)."""
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+    from repro.sim.runtime import make_runtime
+
+    n_dev = jax.local_device_count()
+    cohorts = [8, 16] if quick else [8, 16, 32, 64]
+    nclients = max(cohorts)
+    cfg = FLConfig(num_clients=nclients, num_clusters=1, local_epochs=1,
+                   imbalance_low=0.9, imbalance_high=1.1, seed=0)
+    train, _ = make_image_dataset("mnist", n_train=nclients * 165,
+                                  n_test=64, seed=0)
+    clients = partition_clients(train.y, cfg, seed=0)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    history = np.zeros((nclients,), np.int64)
+    vec = make_runtime(cfg.replace(runtime="vectorized"), adapter,
+                       train.x, train.y, clients)
+    shd = make_runtime(cfg.replace(runtime="sharded"), adapter,
+                       train.x, train.y, clients)
+    out = {"devices": n_dev}
+    for c in cohorts:
+        sel = np.arange(c)
+        t0 = time.time()
+        jax.block_until_ready(shd.train_cohort(params, sel, history))
+        cold_s = time.time() - t0
+        us_v = _t(lambda: vec.train_cohort(params, sel, history),
+                  n=3, warmup=1)
+        us_s = _t(lambda: shd.train_cohort(params, sel, history),
+                  n=3, warmup=0)
+        p_v = vec.train_cohort(params, sel, history)
+        p_s = shd.train_cohort(params, sel, history)
+        diff = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), p_v, p_s)))
+        assert diff < 1e-4, f"sharded drifted from vectorized: {diff}"
+        speedup = us_v / us_s
+        _row(f"cohort_sharded_vec_C{c}", us_v, "devices=1")
+        _row(f"cohort_sharded_shd_C{c}", us_s,
+             f"devices={n_dev} speedup={speedup:.2f}x "
+             f"max_diff={diff:.1e} compile_s={cold_s - us_s / 1e6:.2f}")
+        out[c] = {"vec_us": us_v, "sharded_us": us_s, "speedup": speedup,
+                  "max_param_diff": diff,
+                  "compile_s": max(cold_s - us_s / 1e6, 0.0)}
+    _save("cohort_sharded", out)
 
 
 # ----------------------------------------------------------------------
@@ -335,6 +401,7 @@ BENCHES = {
     "clustering": bench_clustering,
     "selection": bench_selection,
     "cohort_engine": bench_cohort_engine,
+    "cohort_sharded": bench_cohort_sharded,
     "fig3": bench_virtual_dataset,
     "fig4": bench_fig4,
     "fig5": bench_fig5,

@@ -22,8 +22,8 @@ def main():
     ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCH_IDS)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--kv-dtype", default="bfloat16",
-                    choices=["bfloat16", "int8"])
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bfloat16", "int8"])
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch).replace(kv_cache_dtype=args.kv_dtype)

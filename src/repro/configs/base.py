@@ -88,7 +88,11 @@ class ModelConfig:
     dtype: str = "bfloat16"          # parameter / activation dtype
     tie_embeddings: bool = False
     norm_kind: str = "rmsnorm"       # rmsnorm | layernorm
-    kv_cache_dtype: str = "bfloat16" # bfloat16 | int8  (beyond-paper opt)
+    kv_cache_dtype: str = "auto"     # auto (= dtype) | bfloat16 | int8
+    # "auto" inherits the model dtype: a float32 model quietly caching K/V
+    # in bfloat16 loses ~3 decimal digits per slot, which discrete MoE
+    # routing amplifies into expert flips (decode no longer matches the
+    # forward pass). int8 stays an explicit serving opt-in.
     attn_impl: str = "chunked"       # chunked (jnp flash) | naive | pallas
     remat: bool = True               # activation checkpointing over blocks
     remat_policy: str = "nothing"    # nothing | save_block_out: keep each
@@ -127,6 +131,11 @@ class ModelConfig:
     @property
     def is_encdec(self) -> bool:
         return self.encoder_layers > 0
+
+    @property
+    def resolved_kv_cache_dtype(self) -> str:
+        return self.dtype if self.kv_cache_dtype == "auto" \
+            else self.kv_cache_dtype
 
     def supports_long_context(self) -> bool:
         """True if decode state is sub-quadratic in context (prompt rule for
@@ -232,8 +241,13 @@ class FLConfig:
 
     # cohort execution backend (repro.sim): 'sequential' runs the
     # reference per-client loop; 'vectorized' runs whole cohorts as one
-    # compiled vmap/scan program per size bucket (see ROADMAP.md §Usage).
+    # compiled vmap/scan program per size bucket; 'sharded' additionally
+    # maps each bucket's client axis over the cohort mesh's 'data' axis
+    # (shard_map, replicated params, psum FedAvg — see ROADMAP.md §Usage).
     runtime: str = "sequential"
+    # devices on the cohort mesh's data axis for runtime='sharded';
+    # 0 = all local devices. Degrades to the 1-device debug mesh.
+    cohort_mesh_devices: int = 0
     # client-axis vmap width inside one compiled cohort program; chunks of
     # this width run under lax.map so the per-chunk working set stays
     # cache-resident on CPU (full-width vmap thrashes; measured 1.4-2x

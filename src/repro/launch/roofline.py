@@ -117,8 +117,10 @@ def analytic_terms(cfg, shape, n_dev: int, axis=(16, 16)) -> Dict:
                     for b in cfg.cycle) * cfg.num_groups
         flops += 6 * B * cfg.mamba_d_inner * cfg.mamba_d_state * n_rec
         flops_dev = flops / n_dev
+        kv_itemsize = {"int8": 1, "bfloat16": 2, "float16": 2,
+                       "float32": 4}.get(cfg.resolved_kv_cache_dtype, 2)
         cache_bytes = 2 * n_attn * B * cache_tok * cfg.num_kv_heads * hd \
-            * (1 if cfg.kv_cache_dtype == "int8" else 2)
+            * kv_itemsize
         hbm_dev = P_dev + cache_bytes / n_dev * 2 + 2 * B_dev * D * L * 4
         kappa_desc = "decode"
     else:

@@ -393,7 +393,7 @@ def init_kv_cache(cfg, batch, cache_len, layers_leading=()):
     kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
     eff = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
     shape = (*layers_leading, batch, eff, kv, hd)
-    if cfg.kv_cache_dtype == "int8":
+    if cfg.resolved_kv_cache_dtype == "int8":
         c = {
             "k": jnp.zeros(shape, jnp.int8),
             "v": jnp.zeros(shape, jnp.int8),
@@ -401,7 +401,7 @@ def init_kv_cache(cfg, batch, cache_len, layers_leading=()):
             "v_scale": jnp.zeros((*layers_leading, batch, eff, kv), jnp.float32),
         }
     else:
-        dt = jnp.dtype(cfg.kv_cache_dtype)
+        dt = jnp.dtype(cfg.resolved_kv_cache_dtype)
         c = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
     return c
 

@@ -6,16 +6,19 @@ cohorts (see DESIGN.md §Cohort-engine and ROADMAP.md §Usage).
   * engine.py  — runs local SGD/FedProx epochs for a whole bucket as one
     compiled program: ``jax.vmap`` over clients, ``jax.lax.scan`` over
     minibatch steps, fused weighted aggregation.
-  * runtime.py — the ``CohortRuntime`` protocol and the two backends
-    (``sequential`` reference oracle, ``vectorized`` engine).
+  * runtime.py — the ``CohortRuntime`` protocol and the three backends
+    (``sequential`` reference oracle, ``vectorized`` engine, ``sharded``
+    mesh-mapped engine).
 """
 from repro.sim.cohort import CohortBucket, pack_cohort, pack_feature_pass
 from repro.sim.engine import CohortEngine
 from repro.sim.runtime import (CohortRuntime, SequentialRuntime,
-                               VectorizedRuntime, make_runtime)
+                               ShardedRuntime, VectorizedRuntime,
+                               make_runtime)
 
 __all__ = [
     "CohortBucket", "pack_cohort", "pack_feature_pass",
     "CohortEngine",
-    "CohortRuntime", "SequentialRuntime", "VectorizedRuntime", "make_runtime",
+    "CohortRuntime", "SequentialRuntime", "ShardedRuntime",
+    "VectorizedRuntime", "make_runtime",
 ]

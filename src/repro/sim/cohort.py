@@ -72,6 +72,16 @@ def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
+def drop_zero_size_winners(sel_idx: np.ndarray, clients) -> np.ndarray:
+    """Winners with no local samples run no steps and carry no FedAvg
+    mass — drop them before packing/weighting (shared by the sequential
+    oracle and the packer so the drop rule can never desynchronize)."""
+    sel_idx = np.asarray(sel_idx)
+    if sel_idx.size == 0:
+        return sel_idx
+    return sel_idx[[clients[int(i)].size > 0 for i in sel_idx]]
+
+
 def oracle_batch_plan(n: int, bs: int, epochs: int,
                       rng: np.random.Generator) -> np.ndarray:
     """The exact (epochs * steps, bs) local-index plan the sequential
@@ -100,9 +110,12 @@ def _pack_plans(x: np.ndarray, y: np.ndarray,
                 plans: Sequence[np.ndarray],
                 client_ids: Sequence[int],
                 weights: Sequence[float],
-                chunk_width: int = 4) -> List[CohortBucket]:
+                chunk_width: int = 4,
+                client_multiple: int = 1) -> List[CohortBucket]:
     """Group (plan, shard) pairs into (batch size, pow2 step band)
-    buckets and materialize the padded tensors."""
+    buckets and materialize the padded tensors. ``client_multiple`` forces
+    the padded client axis to a multiple of the mesh's data-axis size so a
+    sharded bucket splits evenly across devices."""
     by_key: Dict[tuple, List[int]] = {}
     for pos, plan in enumerate(plans):
         key = (plan.shape[1], _next_pow2(max(plan.shape[0], 1)))
@@ -115,6 +128,7 @@ def _pack_plans(x: np.ndarray, y: np.ndarray,
         # (a 2-client bucket padded to 4 would double its compute)
         c_pad = min(_round_up(len(members), chunk_width),
                     _next_pow2(len(members)))
+        c_pad = _round_up(c_pad, client_multiple)
         xb = np.zeros((c_pad, s_max, bs) + x.shape[1:], x.dtype)
         yb = np.zeros((c_pad, s_max, bs), y.dtype)
         mask = np.zeros((c_pad, s_max), np.float32)
@@ -137,18 +151,22 @@ def _pack_plans(x: np.ndarray, y: np.ndarray,
 
 def pack_cohort(x: np.ndarray, y: np.ndarray, clients,
                 sel_idx: np.ndarray, history: np.ndarray,
-                cfg: FLConfig) -> List[CohortBucket]:
+                cfg: FLConfig, client_multiple: int = 1
+                ) -> List[CohortBucket]:
     """Pack the round's winners for the engine.
 
     ``history`` is the pre-round participation count per client (it seeds
     the oracle's shuffle rng).  Aggregation weights are the oracle's
-    ``p_k = n_k / sum n_k`` over the whole cohort.
+    ``p_k = n_k / sum n_k`` over the whole cohort.  Winners with zero
+    local samples contribute no steps and no FedAvg weight, so they are
+    dropped up front (an all-zero cohort packs to [] — the runtimes treat
+    that as "skip aggregation" instead of zeroing the global params).
     """
-    sel_idx = np.asarray(sel_idx)
+    sel_idx = drop_zero_size_winners(sel_idx, clients)
     if sel_idx.size == 0:
         return []
     sizes = np.array([clients[i].size for i in sel_idx], np.float64)
-    pk = sizes / sizes.sum() if sizes.sum() else sizes
+    pk = sizes / sizes.sum()
 
     shards, plans = [], []
     for i in sel_idx:
@@ -160,7 +178,8 @@ def pack_cohort(x: np.ndarray, y: np.ndarray, clients,
         plans.append(oracle_batch_plan(n, bs, cfg.local_epochs, rng))
     return _pack_plans(x, y, shards, plans, [int(i) for i in sel_idx],
                        [float(p) for p in pk],
-                       chunk_width=cfg.cohort_vmap_width)
+                       chunk_width=cfg.cohort_vmap_width,
+                       client_multiple=client_multiple)
 
 
 def pack_feature_pass(x: np.ndarray, y: np.ndarray, clients,

@@ -3,6 +3,19 @@
 Three compiled entry points, all ``jax.vmap`` over the client axis with a
 ``jax.lax.scan`` over minibatch steps inside:
 
+When constructed with a ``mesh`` (the sharded runtime), the round-training
+entry point additionally maps each bucket's client axis across the mesh's
+``data`` axis with ``shard_map``: params are replicated in, every device
+runs the same chunked vmap/scan program over its C/ndev slice of the
+bucket tensors, and the weighted FedAvg partial sum is reduced on-mesh
+with a ``psum`` — so the per-round result comes back replicated and only
+the reduction order differs from the single-device program (same
+float-reassociation tolerance class as vectorized-vs-sequential).  The
+packer pads the client axis to a multiple of the data-axis size, so the
+shard split is always even; feature passes stay on the single-device path
+(they feed stage-1 clustering, whose logs must be bit-identical across
+runtimes).
+
   * :meth:`CohortEngine.train_bucket` — the round's local training: every
     client runs ``local_epochs`` of SGD (optionally FedProx-proximal)
     from the shared global params; masked (padding) steps are the
@@ -62,12 +75,20 @@ def _client_map(fn, args: Tuple[jnp.ndarray, ...], width: int):
 
 
 class CohortEngine:
-    def __init__(self, adapter: ModelAdapter, cfg: FLConfig):
+    def __init__(self, adapter: ModelAdapter, cfg: FLConfig, mesh=None):
         self.adapter = adapter
         self.cfg = cfg
+        self.mesh = mesh
         self._train = self._build_train()      # jitted inside the builder
+        self._train_sharded = (self._build_train_sharded()
+                               if mesh is not None else None)
         self._weight_feats = jax.jit(self._build_weight_features())
         self._grad_feats = jax.jit(self._build_gradient_features())
+
+    @property
+    def data_axis_size(self) -> int:
+        """Client-axis shard count (1 when unsharded)."""
+        return 1 if self.mesh is None else self.mesh.shape["data"]
 
     # ------------------------------------------------------------------
     def _local_scan(self, params0, opt_init, opt_update, xb, yb, mask,
@@ -91,29 +112,73 @@ class CohortEngine:
                                  (xb, yb, mask))
         return p
 
-    def _build_train(self):
+    def _build_train_core(self):
+        """Shared round-training body used by both the single-device and
+        the mesh-mapped builders: per-client local scans (chunked vmap)
+        plus the f32 weighted FedAvg partial.  Returns (stacked, partial)
+        — callers finish the reduction (astype, or psum + astype)."""
         cfg = self.cfg
         init, upd = sgd(cfg.lr, momentum=cfg.local_momentum)
         proximal = cfg.aggregator == "fedprox"
 
-        def train(global_params, xb, yb, mask, weights,
-                  return_stacked=False):
+        def core(global_params, xb, yb, mask, weights):
             def one_client(cx, cy, cm):
                 return self._local_scan(global_params, init, upd, cx, cy,
                                         cm, global_params, proximal)
 
             stacked = _client_map(one_client, (xb, yb, mask),
                                   cfg.cohort_vmap_width)
-            agg = jax.tree.map(
-                lambda leaf: jnp.tensordot(
-                    weights, leaf.astype(jnp.float32), axes=1
-                ).astype(leaf.dtype),
+            partial = jax.tree.map(
+                lambda leaf: jnp.tensordot(weights,
+                                           leaf.astype(jnp.float32),
+                                           axes=1),
                 stacked)
+            return stacked, partial
+
+        return core
+
+    def _build_train(self):
+        core = self._build_train_core()
+
+        def train(global_params, xb, yb, mask, weights,
+                  return_stacked=False):
+            stacked, partial = core(global_params, xb, yb, mask, weights)
+            agg = jax.tree.map(lambda p, s: p.astype(s.dtype),
+                               partial, stacked)
             # only materialize the (C, ...) per-client trees as a jit
             # output when asked — the round loop needs just the aggregate
+            # (XLA drops the unfetched stacked outputs otherwise)
             return (stacked, agg) if return_stacked else agg
 
         return jax.jit(train, static_argnames="return_stacked")
+
+    def _build_train_sharded(self):
+        """The mesh-mapped twin of ``_build_train``: shard_map over the
+        'data' axis, per-device chunked vmap/scan, FedAvg partial reduced
+        with an on-mesh psum.  Only the aggregate is returned (the stacked
+        per-client trees would live sharded on-device; the inspection path
+        stays on the single-device program)."""
+        from repro.sharding.rules import (cohort_bucket_specs,
+                                          cohort_param_spec)
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:   # pre-0.6 jax keeps it under experimental
+            from jax.experimental.shard_map import shard_map
+        core = self._build_train_core()
+
+        def shard_body(global_params, xb, yb, mask, weights):
+            stacked, partial = core(global_params, xb, yb, mask, weights)
+            # psum the per-device partial across 'data' — weights are
+            # global (they sum to 1 over ALL shards of ALL buckets), so
+            # shard partials just add, same as bucket partials
+            return jax.tree.map(
+                lambda p, s: jax.lax.psum(p, "data").astype(s.dtype),
+                partial, stacked)
+
+        train = shard_map(
+            shard_body, mesh=self.mesh,
+            in_specs=(cohort_param_spec(),) + cohort_bucket_specs(),
+            out_specs=cohort_param_spec())
+        return jax.jit(train)
 
     def _build_weight_features(self):
         cfg = self.cfg
@@ -160,11 +225,14 @@ class CohortEngine:
 
     def train_cohort(self, global_params, buckets: List[CohortBucket]):
         """Aggregated params over all buckets, or None for an empty
-        cohort.  Weights are global, so bucket partials just add."""
+        cohort.  Weights are global, so bucket partials just add.  With a
+        mesh, each bucket runs mesh-mapped (client axis over 'data') and
+        its partial arrives already psum-reduced and replicated."""
+        step = self._train_sharded if self._train_sharded is not None \
+            else self._train
         agg = None
         for b in buckets:
-            part = self._train(global_params, b.xb, b.yb, b.step_mask,
-                               b.weights)
+            part = step(global_params, b.xb, b.yb, b.step_mask, b.weights)
             agg = part if agg is None else jax.tree.map(
                 jnp.add, agg, part)
         return agg
@@ -179,6 +247,13 @@ class CohortEngine:
             for row, cid in enumerate(b.client_idx):
                 if cid >= 0:
                     rows[int(cid)] = feats[row]
+        missing = [i for i, r in enumerate(rows) if r is None]
+        if missing:
+            raise ValueError(
+                f"clients {missing} missing from the packed buckets: "
+                f"expected every id in [0, {num_clients}) exactly once "
+                "(zero-size clients are dropped by the packer and have no "
+                "weight-delta feature)")
         return jnp.stack(rows)
 
     def gradient_features(self, params, xb, yb) -> jnp.ndarray:

@@ -6,11 +6,17 @@ training (selected via ``FLConfig.runtime`` / ``train.py --runtime``).
   * ``vectorized`` — the repro.sim cohort engine: the whole cohort's
     local epochs run as one compiled program per size bucket (vmap over
     clients, scan over steps), with the weighted aggregation fused in.
+  * ``sharded`` — the vectorized engine mesh-mapped over the cohort mesh
+    (launch/mesh.make_cohort_mesh): each bucket's client axis is
+    shard_map'd across the mesh's ``data`` axis with replicated params
+    and an on-mesh psum FedAvg reduction, so a round's local epochs run
+    on every device of the mesh instead of one.  Degrades to the
+    1-device debug mesh (same program, axis size 1) on a plain host.
 
-Both backends are bit-compatible in *behavior* (same shuffles, same batch
+All backends are bit-compatible in *behavior* (same shuffles, same batch
 boundaries, same FedAvg weights); results agree up to float
 reassociation.  The sequential backend stays the ground truth the
-vectorized one is tested against (tests/test_sim.py).
+vectorized and sharded ones are tested against (tests/test_sim.py).
 """
 from __future__ import annotations
 
@@ -23,10 +29,11 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.adapters import ModelAdapter
 from repro.optim import apply_updates, fedprox_grad, sgd
-from repro.sim.cohort import pack_cohort, pack_feature_pass
+from repro.sim.cohort import (drop_zero_size_winners, pack_cohort,
+                              pack_feature_pass)
 from repro.sim.engine import CohortEngine
 
-RUNTIMES = ("sequential", "vectorized")
+RUNTIMES = ("sequential", "vectorized", "sharded")
 
 
 def tree_weighted_sum(trees: List[Any], weights: np.ndarray):
@@ -112,8 +119,12 @@ class SequentialRuntime:
         return p
 
     def train_cohort(self, global_params, sel_idx, history):
-        sel_idx = np.asarray(sel_idx)
         history = np.asarray(history)       # host mirror; never a jnp sync
+        # drop zero-size winners: they have no minibatches to run and no
+        # FedAvg mass — with ALL sizes zero the old ``pk = sizes`` path
+        # silently multiplied the global params by an all-zero weight
+        # vector (tree_weighted_sum -> zero params)
+        sel_idx = drop_zero_size_winners(sel_idx, self.clients)
         if sel_idx.size == 0:
             return None
         locals_ = [self.train_client(global_params, int(i),
@@ -121,7 +132,7 @@ class SequentialRuntime:
                    for i in sel_idx]
         sizes = np.array([self.clients[int(i)].size for i in sel_idx],
                          np.float64)
-        pk = sizes / sizes.sum() if sizes.sum() else sizes
+        pk = sizes / sizes.sum()
         return tree_weighted_sum(locals_, pk)
 
     def cluster_features(self, global_params, key, feature_kind):
@@ -138,9 +149,10 @@ class VectorizedRuntime(SequentialRuntime):
 
     name = "vectorized"
 
-    def __init__(self, cfg, adapter, x, y, clients):
+    def __init__(self, cfg, adapter, x, y, clients, mesh=None):
         super().__init__(cfg, adapter, x, y, clients)
-        self.engine = CohortEngine(adapter, cfg)
+        self.mesh = mesh
+        self.engine = CohortEngine(adapter, cfg, mesh=mesh)
 
     def train_cohort(self, global_params, sel_idx, history):
         buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
@@ -179,11 +191,39 @@ class VectorizedRuntime(SequentialRuntime):
 
 
 # ----------------------------------------------------------------------
+class ShardedRuntime(VectorizedRuntime):
+    """Mesh-mapped cohort engine backend: each bucket's client axis is
+    shard_map'd over the cohort mesh's ``data`` axis (replicated params,
+    per-device chunked vmap/scan, on-mesh psum FedAvg).  The packer pads
+    every bucket's client axis to a multiple of the data-axis size so the
+    shard split is even.  Clustering feature passes inherit the
+    vectorized (single-device) path: they feed stage-1 clustering, whose
+    selection logs must stay bit-identical across runtimes.
+    """
+
+    name = "sharded"
+
+    def __init__(self, cfg, adapter, x, y, clients, mesh=None):
+        if mesh is None:
+            from repro.launch.mesh import make_cohort_mesh
+            mesh = make_cohort_mesh(cfg.cohort_mesh_devices)
+        super().__init__(cfg, adapter, x, y, clients, mesh=mesh)
+
+    def train_cohort(self, global_params, sel_idx, history):
+        buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
+                              history, self.cfg,
+                              client_multiple=self.engine.data_axis_size)
+        return self.engine.train_cohort(global_params, buckets)
+
+
+# ----------------------------------------------------------------------
 def make_runtime(cfg: FLConfig, adapter: ModelAdapter, x, y,
                  clients) -> CohortRuntime:
     if cfg.runtime == "sequential":
         return SequentialRuntime(cfg, adapter, x, y, clients)
     if cfg.runtime == "vectorized":
         return VectorizedRuntime(cfg, adapter, x, y, clients)
+    if cfg.runtime == "sharded":
+        return ShardedRuntime(cfg, adapter, x, y, clients)
     raise ValueError(
         f"unknown FLConfig.runtime={cfg.runtime!r}; expected {RUNTIMES}")

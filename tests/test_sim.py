@@ -1,5 +1,13 @@
 """Cohort execution engine (repro.sim): packing invariants and
-sequential-vs-vectorized equivalence across schemes and uneven shards."""
+sequential-vs-{vectorized,sharded} equivalence across schemes and uneven
+shards.  In this process the sharded runtime runs on the 1-device debug
+mesh (same shard_map program, data axis size 1); the forced-8-device CPU
+mesh is exercised by the subprocess test at the bottom (XLA_FLAGS must be
+set before first jax init — see launch/mesh.py)."""
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,11 +16,13 @@ import pytest
 from repro.configs.base import FLConfig
 from repro.core.adapters import cnn_adapter
 from repro.core.server import FederatedServer
-from repro.data.partition import partition_clients
+from repro.data.partition import ClientData, partition_clients
 from repro.data.synthetic import make_image_dataset
 from repro.sim.cohort import (oracle_batch_plan, pack_cohort,
                               sequential_batch_plan)
 from repro.sim.runtime import make_runtime
+
+ENGINE_RUNTIMES = ("vectorized", "sharded")
 
 # small pool + strong imbalance: some clients hold fewer than 32 train
 # samples, so packing produces several batch-size buckets and clients
@@ -136,9 +146,11 @@ def _max_param_diff(p1, p2) -> float:
         lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2)))
 
 
-def test_train_cohort_matches_oracle(data):
+@pytest.mark.parametrize("runtime", ENGINE_RUNTIMES)
+def test_train_cohort_matches_oracle(data, runtime):
     """One cohort, every client, nonzero histories: aggregated params of
-    the two backends agree up to float reassociation."""
+    the engine backends agree with the oracle up to float reassociation
+    (sharded runs on the 1-device debug mesh here)."""
     cfg = _cfg()
     train, _ = data
     clients = partition_clients(train.y, cfg, seed=3)
@@ -148,15 +160,16 @@ def test_train_cohort_matches_oracle(data):
     sel = np.arange(N_CLIENTS)
     seq = make_runtime(cfg.replace(runtime="sequential"), adapter,
                        train.x, train.y, clients)
-    vec = make_runtime(cfg.replace(runtime="vectorized"), adapter,
+    eng = make_runtime(cfg.replace(runtime=runtime), adapter,
                        train.x, train.y, clients)
     p_seq = seq.train_cohort(params, sel, hist)
-    p_vec = vec.train_cohort(params, sel, hist)
-    assert _max_param_diff(p_seq, p_vec) < 1e-4
+    p_eng = eng.train_cohort(params, sel, hist)
+    assert _max_param_diff(p_seq, p_eng) < 1e-4
 
 
-def test_train_cohort_empty_is_noop(data):
-    cfg = _cfg(runtime="vectorized")
+@pytest.mark.parametrize("runtime", ("vectorized", "sharded"))
+def test_train_cohort_empty_is_noop(data, runtime):
+    cfg = _cfg(runtime=runtime)
     train, _ = data
     clients = partition_clients(train.y, cfg, seed=3)
     adapter = cnn_adapter("mnist")
@@ -166,26 +179,148 @@ def test_train_cohort_empty_is_noop(data):
                            np.zeros(N_CLIENTS)) is None
 
 
-@pytest.mark.parametrize("scheme,aggregator", [
-    ("random", "fedavg"),
-    ("gradient_cluster_auction", "fedavg"),
-    ("gradient_cluster_auction", "fedprox"),
+def _zero_size_client() -> ClientData:
+    e = np.empty((0,), np.int64)
+    return ClientData(train_idx=e, val_idx=e, test_idx=e, primary_label=0)
+
+
+@pytest.mark.parametrize("runtime", ("sequential", "vectorized", "sharded"))
+def test_all_zero_size_cohort_skips_aggregation(data, runtime):
+    """Winners with no local samples must not zero the global params: an
+    all-zero cohort returns None (the old sequential path multiplied the
+    params by an all-zero ``pk`` vector)."""
+    cfg = _cfg(runtime=runtime)
+    train, _ = data
+    clients = [_zero_size_client() for _ in range(3)]
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    rt = make_runtime(cfg, adapter, train.x, train.y, clients)
+    assert rt.train_cohort(params, np.arange(3), np.zeros(3)) is None
+
+
+@pytest.mark.parametrize("runtime", ENGINE_RUNTIMES)
+def test_zero_size_winner_dropped_from_cohort(data, runtime):
+    """A zero-size winner among real ones is dropped; the remaining
+    cohort matches the oracle on the same reduced selection."""
+    cfg = _cfg()
+    train, _ = data
+    clients = (list(partition_clients(train.y, cfg, seed=3))[:4]
+               + [_zero_size_client()])
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    hist = np.zeros(5, np.int64)
+    seq = make_runtime(cfg.replace(runtime="sequential"), adapter,
+                       train.x, train.y, clients)
+    eng = make_runtime(cfg.replace(runtime=runtime), adapter,
+                       train.x, train.y, clients)
+    p_seq = seq.train_cohort(params, np.arange(5), hist)   # drops idx 4
+    p_ref = seq.train_cohort(params, np.arange(4), hist)
+    p_eng = eng.train_cohort(params, np.arange(5), hist)
+    assert _max_param_diff(p_seq, p_ref) == 0.0
+    assert _max_param_diff(p_seq, p_eng) < 1e-4
+
+
+def test_weight_features_missing_client_raises(data):
+    """A client id never placed in any bucket must fail loudly (the old
+    path died inside jnp.stack with an opaque TypeError)."""
+    cfg = _cfg(runtime="vectorized")
+    train, _ = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    rt = make_runtime(cfg, adapter, train.x, train.y, clients)
+    from repro.sim.cohort import pack_feature_pass
+    buckets = pack_feature_pass(train.x, train.y, clients,
+                                chunk_width=cfg.cohort_vmap_width)
+    with pytest.raises(ValueError, match="missing from the packed buckets"):
+        # claim one more client than was packed -> id N has no row
+        rt.engine.weight_features(params, buckets, len(clients) + 1)
+
+
+@pytest.mark.parametrize("scheme,aggregator,runtime", [
+    ("random", "fedavg", "vectorized"),
+    ("gradient_cluster_auction", "fedavg", "vectorized"),
+    ("gradient_cluster_auction", "fedprox", "vectorized"),
+    ("gradient_cluster_auction", "fedavg", "sharded"),
 ])
-def test_full_loop_equivalence(data, scheme, aggregator):
-    """Both runtimes produce identical RoundLog selection/energy fields
+def test_full_loop_equivalence(data, scheme, aggregator, runtime):
+    """Engine runtimes produce identical RoundLog selection/energy fields
     and matching aggregated params over full rounds (clustering included
-    for the auction scheme — the vectorized gradient-feature pass must
+    for the auction scheme — the engine gradient-feature pass must
     reproduce the reference clustering exactly)."""
     logs, params = {}, {}
-    for runtime in ("sequential", "vectorized"):
+    for rt in ("sequential", runtime):
         srv = _server(_cfg(scheme=scheme, aggregator=aggregator,
-                           runtime=runtime), data)
-        logs[runtime] = srv.run()
-        params[runtime] = srv.params
-    for l_seq, l_vec in zip(logs["sequential"], logs["vectorized"]):
-        assert (l_seq.selected == l_vec.selected).all()
-        assert l_seq.energy_std == l_vec.energy_std
-        assert l_seq.mean_bid == l_vec.mean_bid
-        assert l_seq.server_reward == l_vec.server_reward
-    assert _max_param_diff(params["sequential"],
-                           params["vectorized"]) < 1e-4
+                           runtime=rt), data)
+        logs[rt] = srv.run()
+        params[rt] = srv.params
+    for l_seq, l_eng in zip(logs["sequential"], logs[runtime]):
+        assert (l_seq.selected == l_eng.selected).all()
+        assert l_seq.energy_std == l_eng.energy_std
+        assert l_seq.mean_bid == l_eng.mean_bid
+        assert l_seq.server_reward == l_eng.server_reward
+    assert _max_param_diff(params["sequential"], params[runtime]) < 1e-4
+
+
+# ----------------------------------------------------------------------
+# forced multi-device mesh (subprocess: XLA_FLAGS must precede jax init)
+# ----------------------------------------------------------------------
+
+_FORCED_MESH_SCRIPT = r"""
+import jax, numpy as np, jax.numpy as jnp
+assert jax.local_device_count() == 8, jax.local_device_count()
+from repro.configs.base import FLConfig
+from repro.core.adapters import cnn_adapter
+from repro.core.server import FederatedServer
+from repro.data.partition import partition_clients
+from repro.data.synthetic import make_image_dataset
+
+cfg = FLConfig(num_clients=10, num_clusters=3, select_ratio=0.4, rounds=2,
+               local_epochs=2, sample_window=10, cluster_resamples=2,
+               init_energy_mode="normal", scheme="random", seed=3)
+train, test = make_image_dataset("mnist", n_train=700, n_test=120, seed=3)
+adapter = cnn_adapter("mnist")
+logs, params = {}, {}
+for rt in ("vectorized", "sharded"):
+    clients = partition_clients(train.y, cfg, seed=3)
+    srv = FederatedServer(cfg.replace(runtime=rt), adapter, train.x,
+                          train.y, clients,
+                          {"x": test.x[:64], "y": test.y[:64]})
+    if rt == "sharded":
+        assert srv.runtime.engine.data_axis_size == 8, \
+            srv.runtime.engine.data_axis_size
+    logs[rt] = srv.run()
+    params[rt] = srv.params
+for l_v, l_s in zip(logs["vectorized"], logs["sharded"]):
+    assert (l_v.selected == l_s.selected).all()
+    assert l_v.energy_std == l_s.energy_std
+    assert l_v.mean_bid == l_s.mean_bid
+diff = max(jax.tree.leaves(jax.tree.map(
+    lambda a, b: float(jnp.max(jnp.abs(a - b))),
+    params["vectorized"], params["sharded"])))
+assert diff < 1e-4, diff
+print("FORCED_MESH_OK", diff)
+"""
+
+
+def test_sharded_runtime_on_forced_8_device_mesh():
+    """Full-loop vectorized-vs-sharded equivalence on a real 8-way client
+    split: identical selection logs, params within the reassociation
+    tolerance.  Runs in a subprocess because the device-count flag only
+    takes effect before first jax init (launch/mesh.py caveat)."""
+    env = dict(os.environ)
+    # drop any ambient device-count forcing, then append ours (XLA takes
+    # the LAST occurrence, so a developer's exported =4 would win a
+    # naive prepend)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        kept + ["--xla_force_host_platform_device_count=8"])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    r = subprocess.run([sys.executable, "-c", _FORCED_MESH_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "FORCED_MESH_OK" in r.stdout
