@@ -243,8 +243,18 @@ class FLConfig:
     # reference per-client loop; 'vectorized' runs whole cohorts as one
     # compiled vmap/scan program per size bucket; 'sharded' additionally
     # maps each bucket's client axis over the cohort mesh's 'data' axis
-    # (shard_map, replicated params, psum FedAvg — see ROADMAP.md §Usage).
+    # (shard_map, replicated params, psum FedAvg); 'device' keeps the
+    # whole fleet's data resident on device in static capacity-class
+    # tensors — per-round cohort assembly is an on-device gather and
+    # nothing retraces after warm-up (see ROADMAP.md §Usage, DESIGN.md
+    # §Round pipeline).
     runtime: str = "sequential"
+    # evaluate test accuracy/loss every this many rounds (1 = every
+    # round, the paper's cadence; the final round always evaluates,
+    # skipped rounds log NaN). Evaluation results are fetched only at
+    # logging boundaries, so together with the device-buffered round
+    # metrics this sets the async dispatch depth of FederatedServer.run.
+    eval_every: int = 1
     # devices on the cohort mesh's data axis for runtime='sharded';
     # 0 = all local devices. Degrades to the 1-device debug mesh.
     cohort_mesh_devices: int = 0

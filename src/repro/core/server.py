@@ -13,9 +13,20 @@ Stage 3  (per round): winners run I local epochs (FedAvg local SGD, or
 Stage-3 execution is delegated to a pluggable :mod:`repro.sim` cohort
 runtime (``cfg.runtime``): ``sequential`` runs clients one by one (the
 paper's own execution model, kept as the reference oracle), ``vectorized``
-runs the whole cohort as one compiled vmap/scan program per size bucket;
-the *launch* layer additionally maps cohorts onto mesh axes for the
-TPU-scale path — see repro/launch/train.py.
+runs the whole cohort as one compiled vmap/scan program per size bucket,
+``sharded`` maps it over the cohort mesh, and ``device`` keeps the whole
+fleet resident on device (repro.sim.fleet) so per-round assembly is an
+on-device gather; the *launch* layer additionally maps cohorts onto mesh
+axes for the TPU-scale path — see repro/launch/train.py.
+
+The round loop is ASYNC: each round's control-plane metrics (and its
+eval scalars, computed every ``cfg.eval_every`` rounds by one fused
+jitted accuracy+loss program) stay on device in a pending buffer, and
+round t+1's selection/training dispatch while round t's fetches are
+still in flight.  One batched ``device_get`` drains the buffer at
+logging boundaries (verbose prints, ``run_round`` returns, end of run) —
+the only unconditional per-round host transfer left is the winner mask,
+which stage-3's host-seeded shuffle rng genuinely needs.
 """
 from __future__ import annotations
 
@@ -41,13 +52,25 @@ from repro.sim.runtime import make_runtime
 class RoundLog:
     round: int
     selected: np.ndarray
-    test_acc: float
+    test_acc: float            # NaN on rounds skipped by cfg.eval_every
     test_loss: float
     energy_std: float
     mean_bid: float
     server_reward: float
     client_reward_sum: float
     vds_gap: float
+
+
+@dataclass
+class _PendingRound:
+    """A dispatched round whose host fetches haven't happened yet:
+    ``metrics`` is the round step's on-device scalar dict, ``eval_pair``
+    the fused (accuracy, loss) device scalars or None off-cadence."""
+
+    round: int
+    selected: np.ndarray
+    metrics: Any
+    eval_pair: Optional[Any]
 
 
 class FederatedServer:
@@ -90,6 +113,14 @@ class FederatedServer:
         # reads history per winner, which on the device array cost one
         # int(history[i]) sync per client per round.
         self._host_history = np.zeros((cfg.num_clients,), np.int64)
+        # fused eval: accuracy + loss as ONE jitted program (the two
+        # nested jits inline), so an eval round costs one deferred fetch
+        # instead of two blocking ones; the test batch is committed to
+        # device once instead of being re-transferred per round.
+        self._eval_step = jax.jit(
+            lambda p, b: (adapter.accuracy(p, b), adapter.loss(p, b)))
+        self._test_dev = jax.device_put(test_batch)
+        self._pending: List[_PendingRound] = []
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -145,16 +176,21 @@ class FederatedServer:
             global_params, client_idx, int(self._host_history[client_idx]))
 
     # ------------------------------------------------------------------
-    def run_round(self, t: int) -> RoundLog:
-        """One FL round. The whole stage-2 control plane (selection,
-        rewards, energy/history update, round metrics) is one jitted call
-        (repro.core.rounds.make_round_step); the winner mask and metric
-        scalars come back in a single host transfer, stage-3 training then
-        overlaps the already-dispatched state update."""
-        cfg = self.cfg
+    def _eval_due(self, t: int, final: bool = False) -> bool:
+        return final or self.cfg.eval_every <= 1 \
+            or t % self.cfg.eval_every == 0
+
+    def _dispatch_round(self, t: int, eval_now: bool) -> None:
+        """Dispatch one FL round without fetching its results.  The whole
+        stage-2 control plane (selection, rewards, energy/history update,
+        round metrics) is one jitted call (repro.core.rounds
+        .make_round_step); only the winner mask is fetched — stage-3's
+        host-seeded shuffle rng needs it — while the metric scalars (and
+        the fused eval pair, when due) stay on device in the pending
+        buffer until the next logging boundary."""
         new_state, win, metrics = self._round_step(self.state,
                                                    self._next_key())
-        win_np, m = jax.device_get((win, metrics))
+        win_np = jax.device_get(win)
         sel_idx = np.nonzero(win_np)[0]
 
         # stage 3: local training + aggregation (cohort runtime backend);
@@ -166,30 +202,58 @@ class FederatedServer:
 
         self.state = new_state
         self._host_history[sel_idx] += 1
-        self.total_client_reward += float(m["client_reward_sum"])
+        ev = self._eval_step(self.params, self._test_dev) if eval_now \
+            else None
+        self._pending.append(_PendingRound(
+            round=t, selected=sel_idx, metrics=metrics, eval_pair=ev))
 
-        # evaluation (model quality — the only other host fetches)
-        acc = float(self.adapter.accuracy(self.params, self.test_batch))
-        loss = float(self.adapter.loss(self.params, self.test_batch))
-        log = RoundLog(
-            round=t, selected=sel_idx, test_acc=acc, test_loss=loss,
-            energy_std=float(m["energy_std"]),
-            mean_bid=float(m["mean_bid"]),
-            server_reward=float(m["server_reward"]),
-            client_reward_sum=float(m["client_reward_sum"]),
-            vds_gap=float(m["vds_gap"]))
-        self.logs.append(log)
-        return log
+    def _flush_pending(self) -> None:
+        """Drain the pending buffer with ONE batched device_get and turn
+        every entry into a RoundLog (deferring the fetch cannot change
+        the values — they were computed by the same programs)."""
+        if not self._pending:
+            return
+        fetched = jax.device_get(
+            [(p.metrics, p.eval_pair) for p in self._pending])
+        for p, (m, ev) in zip(self._pending, fetched):
+            acc, loss = ((float(ev[0]), float(ev[1])) if ev is not None
+                         else (float("nan"), float("nan")))
+            self.total_client_reward += float(m["client_reward_sum"])
+            self.logs.append(RoundLog(
+                round=p.round, selected=p.selected, test_acc=acc,
+                test_loss=loss, energy_std=float(m["energy_std"]),
+                mean_bid=float(m["mean_bid"]),
+                server_reward=float(m["server_reward"]),
+                client_reward_sum=float(m["client_reward_sum"]),
+                vds_gap=float(m["vds_gap"])))
+        self._pending.clear()
+
+    def run_round(self, t: int) -> RoundLog:
+        """One synchronous FL round (dispatch + immediate flush) — the
+        single-round API; the async pipeline lives in :meth:`run`."""
+        self._dispatch_round(t, self._eval_due(t))
+        self._flush_pending()
+        return self.logs[-1]
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, verbose: bool = False):
         self.cluster()
+        warmup = getattr(self.runtime, "warmup", None)
+        if warmup is not None:    # device runtime: compile every class
+            warmup(self.params)
         T = rounds if rounds is not None else self.cfg.rounds
         for t in range(T):
-            log = self.run_round(t)
-            if verbose and (t % 5 == 0 or t == T - 1):
+            # verbose print boundaries force an eval so the progress
+            # line never shows NaN on an off-cadence round
+            printing = verbose and (t % 5 == 0 or t == T - 1)
+            self._dispatch_round(
+                t, printing or self._eval_due(t, final=t == T - 1))
+            if printing:
+                self._flush_pending()
+                log = self.logs[-1]
                 print(f"  round {t:3d} acc={log.test_acc:.3f} "
                       f"loss={log.test_loss:.3f} "
                       f"E_std={log.energy_std:.3f} bid={log.mean_bid:.3f} "
                       f"vds_gap={log.vds_gap:.3f}")
+        self._flush_pending()
         return self.logs

@@ -43,12 +43,22 @@ Cohort execution backend (``--runtime``, see repro/sim/):
     launching (the flag must precede first jax init — see
     launch/mesh.py).  Equivalence with ``vectorized`` (and the oracle)
     is enforced by tests/test_sim.py on both mesh shapes.
+  * ``device``: the device-resident fleet pipeline (repro.sim.fleet) —
+    all clients' data packed once into static capacity-class device
+    tensors at init, per-round cohorts assembled as on-device gathers,
+    compile-once shape policy (zero retraces after warm-up), async
+    round loop.  ``--eval-every N`` evaluates test accuracy/loss only
+    every N rounds (skipped rounds log NaN; the final round always
+    evaluates) — eval is the deepest per-round host sync, so raising it
+    lengthens the async pipeline for every runtime.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.train --mode paper \
       --scheme gradient_cluster_auction --rounds 30
   PYTHONPATH=src python -m repro.launch.train --mode paper \
       --runtime vectorized --clients 200 --rounds 30
+  PYTHONPATH=src python -m repro.launch.train --mode paper \
+      --runtime device --eval-every 5 --rounds 30
   PYTHONPATH=src python -m repro.launch.train --mode transformer \
       --arch qwen2-0.5b --rounds 3
   PYTHONPATH=src python -m repro.launch.train --mode selection \
@@ -79,7 +89,7 @@ def run_paper(args) -> dict:
         non_iid_level=args.nu, scheme=args.scheme,
         aggregator=args.aggregator, init_energy_mode=args.energy_mode,
         runtime=args.runtime, cohort_mesh_devices=args.cohort_devices,
-        seed=args.seed)
+        eval_every=args.eval_every, seed=args.seed)
     train, test = make_image_dataset(args.dataset,
                                      n_train=args.pool, n_test=args.pool // 6,
                                      seed=args.seed)
@@ -115,7 +125,8 @@ def run_transformer(args) -> dict:
         select_ratio=0.2, rounds=args.rounds, lr=args.lr,
         non_iid_level=args.nu, scheme=args.scheme, num_classes=10,
         sample_window=8, cluster_resamples=2, runtime=args.runtime,
-        cohort_mesh_devices=args.cohort_devices, seed=args.seed)
+        cohort_mesh_devices=args.cohort_devices,
+        eval_every=args.eval_every, seed=args.seed)
     toks, topics = make_token_dataset(
         num_topics=10, vocab=mcfg.vocab_size, seq_len=32,
         n=cfg.num_clients * 40, seed=args.seed)
@@ -206,15 +217,24 @@ def main():
     ap.add_argument("--aggregator", default="fedavg",
                     choices=["fedavg", "fedprox"])
     ap.add_argument("--runtime", default="sequential",
-                    choices=["sequential", "vectorized", "sharded"],
+                    choices=["sequential", "vectorized", "sharded",
+                             "device"],
                     help="cohort execution backend (repro.sim): "
                          "'vectorized' runs whole cohorts as one compiled "
                          "vmap/scan program per size bucket; 'sharded' "
                          "additionally maps the client axis over the "
-                         "cohort mesh's data axis (shard_map + psum)")
+                         "cohort mesh's data axis (shard_map + psum); "
+                         "'device' keeps the fleet's data resident on "
+                         "device in static capacity classes (compile "
+                         "once, zero per-round host repack)")
     ap.add_argument("--cohort-devices", type=int, default=0,
                     help="data-axis size of the cohort mesh for "
-                         "--runtime sharded (0 = all local devices)")
+                         "--runtime sharded/device (0 = all local "
+                         "devices)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate test acc/loss every N rounds (skipped "
+                         "rounds log NaN; the final round always "
+                         "evaluates) — deepens the async round pipeline")
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--clusters", type=int, default=10)
     ap.add_argument("--select-ratio", type=float, default=0.1)

@@ -1,24 +1,32 @@
 """Cohort execution engine: batched local training for whole auction
-cohorts (see DESIGN.md §Cohort-engine and ROADMAP.md §Usage).
+cohorts (see DESIGN.md §Cohort-engine / §Round pipeline and ROADMAP.md
+§Usage).
 
   * cohort.py  — packs selected clients' shards into padded, size-bucketed
-    minibatch tensors with per-step validity masks.
-  * engine.py  — runs local SGD/FedProx epochs for a whole bucket as one
-    compiled program: ``jax.vmap`` over clients, ``jax.lax.scan`` over
-    minibatch steps, fused weighted aggregation.
-  * runtime.py — the ``CohortRuntime`` protocol and the three backends
+    minibatch tensors with per-step validity masks; ``HostPlanCache``
+    memoizes the per-client plan structure + local data gathers.
+  * fleet.py   — ``FleetStore``: the whole fleet packed once into
+    device-resident capacity-class tensors; per-round cohorts assemble as
+    tiny int index plans (the ``device`` runtime's data plane).
+  * engine.py  — runs local SGD/FedProx epochs for a whole bucket or
+    capacity class as one compiled program: ``jax.vmap`` over clients,
+    ``jax.lax.scan`` over minibatch steps, fused weighted aggregation.
+  * runtime.py — the ``CohortRuntime`` protocol and the four backends
     (``sequential`` reference oracle, ``vectorized`` engine, ``sharded``
-    mesh-mapped engine).
+    mesh-mapped engine, ``device`` resident-fleet pipeline).
 """
-from repro.sim.cohort import CohortBucket, pack_cohort, pack_feature_pass
+from repro.sim.cohort import (CohortBucket, HostPlanCache, pack_cohort,
+                              pack_feature_pass)
 from repro.sim.engine import CohortEngine
-from repro.sim.runtime import (CohortRuntime, SequentialRuntime,
-                               ShardedRuntime, VectorizedRuntime,
-                               make_runtime)
+from repro.sim.fleet import CapacityClass, ClassBatch, FleetStore
+from repro.sim.runtime import (CohortRuntime, DeviceRuntime,
+                               SequentialRuntime, ShardedRuntime,
+                               VectorizedRuntime, make_runtime)
 
 __all__ = [
-    "CohortBucket", "pack_cohort", "pack_feature_pass",
+    "CohortBucket", "HostPlanCache", "pack_cohort", "pack_feature_pass",
     "CohortEngine",
-    "CohortRuntime", "SequentialRuntime", "ShardedRuntime",
-    "VectorizedRuntime", "make_runtime",
+    "CapacityClass", "ClassBatch", "FleetStore",
+    "CohortRuntime", "DeviceRuntime", "SequentialRuntime",
+    "ShardedRuntime", "VectorizedRuntime", "make_runtime",
 ]

@@ -24,11 +24,18 @@ against the *global* cohort weights) sum to the full FedAvg update.
 The shuffle stream matches the oracle bit-for-bit: the same
 ``np.random.default_rng(history * 977 + client_idx)`` seed and the same
 per-epoch ``permutation`` draws.
+
+Everything about a client's plan EXCEPT the permutation values — its
+batch size, step count, and the ``x[shard]`` local data gather — depends
+only on the shard, so :class:`HostPlanCache` memoizes those at runtime
+init and per-round packing rebuilds only the permutations (the old path
+re-derived the plan structure and re-gathered ``x[shard[plan]]`` from the
+full global pool every round).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -105,22 +112,82 @@ def sequential_batch_plan(n: int, bs: int) -> np.ndarray:
     return np.arange(steps * bs, dtype=np.int64).reshape(steps, bs)
 
 
-def _pack_plans(x: np.ndarray, y: np.ndarray,
-                global_idx: Sequence[np.ndarray],
+class HostPlanCache:
+    """Per-client plan structure and local data shards, memoized once.
+
+    ``oracle_batch_plan`` is (permutation, structure): the batch size,
+    per-epoch step count and batch boundaries depend only on the shard
+    size and ``local_epochs``; only the permutation values depend on the
+    history-seeded rng.  The cache precomputes the structure (and the
+    ``x[shard]``/``y[shard]`` local copies, gathered lazily once per
+    client) so :func:`pack_cohort` rebuilds just the per-epoch
+    permutations per round and gathers minibatches from the small
+    contiguous local arrays instead of the global pool.
+
+    :meth:`plan` returns *local* sample indices (into the client's own
+    shard), bit-identical to ``shardless`` composition of the oracle:
+    ``shard[oracle_batch_plan(...)] == local_data[plan(...)]`` row for
+    row (tests/test_fleet.py).
+    """
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, clients,
+                 epochs: int):
+        self.epochs = int(epochs)
+        self._x, self._y = x, y
+        self.shards = [np.asarray(c.train_idx) for c in clients]
+        self.sizes = np.array([len(s) for s in self.shards], np.int64)
+        self.bs = np.minimum(32, self.sizes)
+        # full minibatches of bs with the remainder dropped = n // bs
+        self.steps = np.where(self.sizes > 0,
+                              self.sizes // np.maximum(self.bs, 1), 0)
+        self._local: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+
+    def local_data(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(x[shard], y[shard]) for client ``i``, gathered once."""
+        got = self._local.get(i)
+        if got is None:
+            s = self.shards[i]
+            got = self._local[i] = (self._x[s], self._y[s])
+        return got
+
+    def drop_local_data(self) -> None:
+        """Release the memoized host copies (lazily re-gathered on next
+        use).  The device runtime calls this after the fleet store has
+        packed them onto the device — keeping a full host duplicate of
+        the pool alive for the whole run would defeat 'pack once'."""
+        self._local.clear()
+
+    def plan(self, i: int, history_count: int) -> np.ndarray:
+        """The oracle's (epochs * steps, bs) plan in LOCAL indices: only
+        the ``rng.permutation`` draws are recomputed per call."""
+        n, bs = int(self.sizes[i]), int(self.bs[i])
+        s = int(self.steps[i])
+        rng = np.random.default_rng(int(history_count) * 977 + int(i))
+        out = np.empty((self.epochs * s, bs), np.int64)
+        for e in range(self.epochs):
+            order = rng.permutation(n)
+            out[e * s:(e + 1) * s] = order[:s * bs].reshape(s, bs)
+        return out
+
+
+def _pack_plans(locals_xy: Sequence[Tuple[np.ndarray, np.ndarray]],
                 plans: Sequence[np.ndarray],
                 client_ids: Sequence[int],
                 weights: Sequence[float],
                 chunk_width: int = 4,
                 client_multiple: int = 1) -> List[CohortBucket]:
-    """Group (plan, shard) pairs into (batch size, pow2 step band)
-    buckets and materialize the padded tensors. ``client_multiple`` forces
-    the padded client axis to a multiple of the mesh's data-axis size so a
-    sharded bucket splits evenly across devices."""
+    """Group (plan, local shard) pairs into (batch size, pow2 step band)
+    buckets and materialize the padded tensors.  ``locals_xy[m]`` holds
+    member m's (x_local, y_local) data and ``plans[m]`` indexes into it
+    (local indices).  ``client_multiple`` forces the padded client axis to
+    a multiple of the mesh's data-axis size so a sharded bucket splits
+    evenly across devices."""
     by_key: Dict[tuple, List[int]] = {}
     for pos, plan in enumerate(plans):
         key = (plan.shape[1], _next_pow2(max(plan.shape[0], 1)))
         by_key.setdefault(key, []).append(pos)
 
+    x0, y0 = locals_xy[0]
     buckets = []
     for (bs, _band), members in sorted(by_key.items()):
         s_max = _round_up(max(plans[m].shape[0] for m in members), 4)
@@ -129,17 +196,17 @@ def _pack_plans(x: np.ndarray, y: np.ndarray,
         c_pad = min(_round_up(len(members), chunk_width),
                     _next_pow2(len(members)))
         c_pad = _round_up(c_pad, client_multiple)
-        xb = np.zeros((c_pad, s_max, bs) + x.shape[1:], x.dtype)
-        yb = np.zeros((c_pad, s_max, bs), y.dtype)
+        xb = np.zeros((c_pad, s_max, bs) + x0.shape[1:], x0.dtype)
+        yb = np.zeros((c_pad, s_max, bs), y0.dtype)
         mask = np.zeros((c_pad, s_max), np.float32)
         w = np.zeros((c_pad,), np.float32)
         cid = np.full((c_pad,), -1, np.int32)
         for row, m in enumerate(members):
-            plan, shard = plans[m], global_idx[m]
+            plan = plans[m]
+            xl, yl = locals_xy[m]
             s = plan.shape[0]
-            gathered = shard[plan]                     # (s, bs) global ids
-            xb[row, :s] = x[gathered]
-            yb[row, :s] = y[gathered]
+            xb[row, :s] = xl[plan]                     # (s, bs, *feat)
+            yb[row, :s] = yl[plan]
             mask[row, :s] = 1.0
             w[row] = weights[m]
             cid[row] = client_ids[m]
@@ -151,7 +218,8 @@ def _pack_plans(x: np.ndarray, y: np.ndarray,
 
 def pack_cohort(x: np.ndarray, y: np.ndarray, clients,
                 sel_idx: np.ndarray, history: np.ndarray,
-                cfg: FLConfig, client_multiple: int = 1
+                cfg: FLConfig, client_multiple: int = 1,
+                cache: Optional[HostPlanCache] = None
                 ) -> List[CohortBucket]:
     """Pack the round's winners for the engine.
 
@@ -161,38 +229,41 @@ def pack_cohort(x: np.ndarray, y: np.ndarray, clients,
     local samples contribute no steps and no FedAvg weight, so they are
     dropped up front (an all-zero cohort packs to [] — the runtimes treat
     that as "skip aggregation" instead of zeroing the global params).
+
+    ``cache`` carries the memoized plan structure + local data shards
+    across rounds; without one a throwaway cache is built (same result,
+    no reuse).
     """
     sel_idx = drop_zero_size_winners(sel_idx, clients)
     if sel_idx.size == 0:
         return []
-    sizes = np.array([clients[i].size for i in sel_idx], np.float64)
+    if cache is None:
+        cache = HostPlanCache(x, y, clients, cfg.local_epochs)
+    sizes = cache.sizes[sel_idx].astype(np.float64)
     pk = sizes / sizes.sum()
 
-    shards, plans = [], []
-    for i in sel_idx:
-        c = clients[int(i)]
-        n = len(c.train_idx)
-        bs = min(32, n)
-        rng = np.random.default_rng(int(history[int(i)]) * 977 + int(i))
-        shards.append(np.asarray(c.train_idx))
-        plans.append(oracle_batch_plan(n, bs, cfg.local_epochs, rng))
-    return _pack_plans(x, y, shards, plans, [int(i) for i in sel_idx],
+    locals_xy = [cache.local_data(int(i)) for i in sel_idx]
+    plans = [cache.plan(int(i), int(history[int(i)])) for i in sel_idx]
+    return _pack_plans(locals_xy, plans, [int(i) for i in sel_idx],
                        [float(p) for p in pk],
                        chunk_width=cfg.cohort_vmap_width,
                        client_multiple=client_multiple)
 
 
 def pack_feature_pass(x: np.ndarray, y: np.ndarray, clients,
-                      chunk_width: int = 4) -> List[CohortBucket]:
+                      chunk_width: int = 4,
+                      cache: Optional[HostPlanCache] = None
+                      ) -> List[CohortBucket]:
     """Pack *all* clients for the clustering weight-feature pass: one
     in-order epoch per client (no shuffle), unit weights (features are
     returned per client, not aggregated)."""
-    shards, plans = [], []
-    for c in clients:
-        n = len(c.train_idx)
-        bs = min(32, n)
-        shards.append(np.asarray(c.train_idx))
-        plans.append(sequential_batch_plan(n, bs))
+    if cache is None:
+        cache = HostPlanCache(x, y, clients, 1)
+    locals_xy, plans = [], []
+    for i in range(len(clients)):
+        locals_xy.append(cache.local_data(i))
+        plans.append(sequential_batch_plan(int(cache.sizes[i]),
+                                           int(cache.bs[i])))
     ids = list(range(len(clients)))
-    return _pack_plans(x, y, shards, plans, ids, [1.0] * len(clients),
+    return _pack_plans(locals_xy, plans, ids, [1.0] * len(clients),
                        chunk_width=chunk_width)

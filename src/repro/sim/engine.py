@@ -25,6 +25,18 @@ runtimes).
     feature: flattened param delta after one in-order epoch of plain SGD.
   * :meth:`CohortEngine.gradient_features` — the paper's clustering
     feature: mean flattened gradient over the T0 sample-window draws.
+  * :meth:`CohortEngine.train_class` — the device-resident twin of
+    ``train_bucket`` for the ``device`` runtime (repro.sim.fleet): instead
+    of consuming host-packed ``(C, S, bs, ...)`` minibatch tensors it
+    takes a capacity class's resident ``(P, n_cap, *feat)`` store plus
+    tiny per-round int tensors (winner rows + local batch plans) and
+    gathers each step's minibatch *inside* the compiled program
+    (``jnp.take`` by winner row, then a per-step take over the plan), so
+    per-round host work is index assembly only — no sample ever crosses
+    host->device after init.  Capacity classes are static (derived from
+    the whole fleet at init), so these programs compile once per class;
+    ``CohortEngine.stats`` counts traces and per-shape cache hits/misses
+    to make "zero retraces after warm-up" assertable.
 
 ``jax.jit`` retraces per distinct bucket shape ``(C, S, bs)``; the packer
 pads C to a multiple of the vmap chunk width, S to a multiple of 4, and
@@ -79,9 +91,17 @@ class CohortEngine:
         self.adapter = adapter
         self.cfg = cfg
         self.mesh = mesh
+        # compile bookkeeping for the round-training programs: ``traces``
+        # increments inside the traced bodies (runs only when XLA
+        # (re)compiles); hits/misses track per-call shape-signature reuse.
+        self.stats = {"traces": 0, "shape_hits": 0, "shape_misses": 0}
+        self._seen_shapes = set()
         self._train = self._build_train()      # jitted inside the builder
         self._train_sharded = (self._build_train_sharded()
                                if mesh is not None else None)
+        self._train_gather = self._build_train_gather()
+        self._train_gather_sharded = (self._build_train_gather_sharded()
+                                      if mesh is not None else None)
         self._weight_feats = jax.jit(self._build_weight_features())
         self._grad_feats = jax.jit(self._build_gradient_features())
 
@@ -90,26 +110,61 @@ class CohortEngine:
         """Client-axis shard count (1 when unsharded)."""
         return 1 if self.mesh is None else self.mesh.shape["data"]
 
-    # ------------------------------------------------------------------
-    def _local_scan(self, params0, opt_init, opt_update, xb, yb, mask,
-                    global_params, proximal: bool):
-        """Scan ``local_step`` over the step axis for one client."""
+    def _note_shape(self, key) -> None:
+        if key in self._seen_shapes:
+            self.stats["shape_hits"] += 1
+        else:
+            self._seen_shapes.add(key)
+            self.stats["shape_misses"] += 1
 
-        def step(carry, inp):
-            p, opt = carry
-            xs, ys, m = inp
+    # ------------------------------------------------------------------
+    def _masked_step(self, opt_update, proximal: bool, global_params):
+        """One masked local SGD step shared by both scan flavors: a
+        masked (padding) step is the identity on params AND opt state."""
+
+        def apply(p, opt, xs, ys, m):
             g = self.adapter.grad(p, {"x": xs, "y": ys})
             if proximal:
                 g = fedprox_grad(g, p, global_params, self.cfg.fedprox_mu)
             u, opt2 = opt_update(g, opt, p)
             p2 = apply_updates(p, u)
             keep = m > 0.5
-            nxt = jax.tree.map(lambda a, b: jnp.where(keep, b, a),
-                               (p, opt), (p2, opt2))
-            return nxt, None
+            return jax.tree.map(lambda a, b: jnp.where(keep, b, a),
+                                (p, opt), (p2, opt2))
+
+        return apply
+
+    def _local_scan(self, params0, opt_init, opt_update, xb, yb, mask,
+                    global_params, proximal: bool):
+        """Scan ``local_step`` over the step axis for one client."""
+        upd = self._masked_step(opt_update, proximal, global_params)
+
+        def step(carry, inp):
+            xs, ys, m = inp
+            return upd(*carry, xs, ys, m), None
 
         (p, _), _ = jax.lax.scan(step, (params0, opt_init(params0)),
                                  (xb, yb, mask))
+        return p
+
+    def _local_scan_gather(self, params0, opt_init, opt_update, x_row,
+                           y_row, plan, mask, global_params,
+                           proximal: bool):
+        """The device-resident twin of :meth:`_local_scan`: the scan
+        carries the client's resident (n_cap, *feat) data and gathers
+        each step's (bs,) minibatch by plan indices — the padded
+        (S, bs, *feat) tensor of the host-packed path is never
+        materialized."""
+        upd = self._masked_step(opt_update, proximal, global_params)
+
+        def step(carry, inp):
+            idx, m = inp
+            xs = jnp.take(x_row, idx, axis=0)
+            ys = jnp.take(y_row, idx, axis=0)
+            return upd(*carry, xs, ys, m), None
+
+        (p, _), _ = jax.lax.scan(step, (params0, opt_init(params0)),
+                                 (plan, mask))
         return p
 
     def _build_train_core(self):
@@ -122,6 +177,8 @@ class CohortEngine:
         proximal = cfg.aggregator == "fedprox"
 
         def core(global_params, xb, yb, mask, weights):
+            self.stats["traces"] += 1      # runs at trace time only
+
             def one_client(cx, cy, cm):
                 return self._local_scan(global_params, init, upd, cx, cy,
                                         cm, global_params, proximal)
@@ -180,6 +237,75 @@ class CohortEngine:
             out_specs=cohort_param_spec())
         return jax.jit(train)
 
+    def _build_train_gather_core(self):
+        """Round-training body for the device-resident fleet path: take
+        the winners' rows out of the class store, run the same chunked
+        vmap/scan as the bucket path with per-step index gathers, and
+        fuse the f32 weighted FedAvg partial.  Returns the partial;
+        callers finish the reduction (astype, or psum + astype)."""
+        cfg = self.cfg
+        init, upd = sgd(cfg.lr, momentum=cfg.local_momentum)
+        proximal = cfg.aggregator == "fedprox"
+
+        def core(global_params, class_x, class_y, rows, plans, mask,
+                 weights):
+            self.stats["traces"] += 1      # runs at trace time only
+            xg = jnp.take(class_x, rows, axis=0)   # (C, n_cap, *feat)
+            yg = jnp.take(class_y, rows, axis=0)
+
+            def one_client(x_row, y_row, plan, m):
+                return self._local_scan_gather(global_params, init, upd,
+                                               x_row, y_row, plan, m,
+                                               global_params, proximal)
+
+            stacked = _client_map(one_client, (xg, yg, plans, mask),
+                                  cfg.cohort_vmap_width)
+            return jax.tree.map(
+                lambda leaf: jnp.tensordot(weights,
+                                           leaf.astype(jnp.float32),
+                                           axes=1),
+                stacked)
+
+        return core
+
+    def _build_train_gather(self):
+        core = self._build_train_gather_core()
+
+        def train(global_params, class_x, class_y, rows, plans, mask,
+                  weights):
+            partial = core(global_params, class_x, class_y, rows, plans,
+                           mask, weights)
+            return jax.tree.map(lambda p, g: p.astype(g.dtype),
+                                partial, global_params)
+
+        return jax.jit(train)
+
+    def _build_train_gather_sharded(self):
+        """Mesh-mapped twin of ``_build_train_gather``: the class store
+        stays replicated (each device gathers its own winners' rows), the
+        per-invocation tensors shard their client axis over 'data', and
+        the FedAvg partial is psum-reduced on-mesh."""
+        from repro.sharding.rules import (cohort_param_spec,
+                                          fleet_class_specs)
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:   # pre-0.6 jax keeps it under experimental
+            from jax.experimental.shard_map import shard_map
+        core = self._build_train_gather_core()
+
+        def shard_body(global_params, class_x, class_y, rows, plans,
+                       mask, weights):
+            partial = core(global_params, class_x, class_y, rows, plans,
+                           mask, weights)
+            return jax.tree.map(
+                lambda p, g: jax.lax.psum(p, "data").astype(g.dtype),
+                partial, global_params)
+
+        train = shard_map(
+            shard_body, mesh=self.mesh,
+            in_specs=(cohort_param_spec(),) + fleet_class_specs(),
+            out_specs=cohort_param_spec())
+        return jax.jit(train)
+
     def _build_weight_features(self):
         cfg = self.cfg
         init, upd = sgd(cfg.lr)   # the feature pass uses plain SGD
@@ -232,10 +358,26 @@ class CohortEngine:
             else self._train
         agg = None
         for b in buckets:
+            self._note_shape(("bucket", b.xb.shape))
             part = step(global_params, b.xb, b.yb, b.step_mask, b.weights)
             agg = part if agg is None else jax.tree.map(
                 jnp.add, agg, part)
         return agg
+
+    def train_class(self, global_params, class_x, class_y, rows, plans,
+                    step_mask, weights):
+        """One capacity-class invocation of the device-resident round
+        trainer: ``class_x/class_y`` are the class's resident ``(P,
+        n_cap, ...)`` store, the rest are the per-round ``(C_cap, ...)``
+        index/weight tensors (repro.sim.fleet.ClassBatch).  Returns the
+        weighted FedAvg partial over this invocation's winners; partials
+        across invocations just add (weights are global)."""
+        self._note_shape(("class", class_x.shape, plans.shape))
+        step = self._train_gather_sharded \
+            if self._train_gather_sharded is not None \
+            else self._train_gather
+        return step(global_params, class_x, class_y, rows, plans,
+                    step_mask, weights)
 
     def weight_features(self, global_params, buckets: List[CohortBucket],
                         num_clients: int) -> jnp.ndarray:

@@ -1,0 +1,213 @@
+"""FleetStore: device-resident fleet data + compile-once capacity classes.
+
+The host-packed runtimes (``vectorized``/``sharded``) rebuild padded
+``(C, S, bs, *feat)`` minibatch tensors on the host every round and pay
+an H2D copy per bucket; worse, the bucket shapes are *data-dependent* —
+``(batch size, pow2 step band)`` over whichever clients won the auction —
+so jit retraces whenever a round's cohort composition shifts.  The
+``device`` runtime replaces both taxes:
+
+* **Pack once.**  At server init every client's local shard is gathered
+  once into a device-resident per-class store ``(P, n_cap, *feat)``
+  (row-major by client, plus size/step tables).  Per-round cohort
+  assembly is then an on-device ``jnp.take`` by winner rows inside the
+  compiled program — the only thing the host builds per round are tiny
+  int32 index tensors (winner rows + local batch plans, i.e. the oracle's
+  shuffle permutations, which must stay on the host rng to remain
+  bit-compatible with the sequential oracle).
+
+* **Compile once.**  Bucket shapes are replaced by a small static set of
+  **capacity classes** derived from the *fleet* at init, not the round's
+  cohort: class key = (batch size, pow2 band of total local steps), step
+  capacity = the class's fleet-wide max (rounded to a multiple of 4),
+  client capacity = a short pow2 **tier ladder** up to the per-round
+  winner bound (each tier rounded to a multiple of the mesh data-axis
+  size).  Every possible winner maps to a pre-known class and every
+  possible winner count to a pre-known tier, so ``CohortEngine
+  .train_class`` compiles once per (class, tier) at warm-up and never
+  retraces; a round whose winners in one class exceed the top tier
+  simply runs the *same* compiled programs more than once (greedy
+  largest-fitting-tier chunking).
+
+Padding waste bound: within a class the pow2 step band keeps any member
+below ~2x the steps of the smallest, same as the bucket path; the pow2
+tier ladder keeps client-axis padding below 2x the invocation's real
+winner count (exactly the bucket packer's ``next_pow2`` bound; masked
+rows are weight-0 and drop out of the FedAvg sum exactly), at the cost
+of one warm-up compile per (class, tier).  See DESIGN.md §Round
+pipeline.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.selection import k_per_cluster
+from repro.sim.cohort import HostPlanCache, _next_pow2, _round_up
+
+
+@dataclass
+class CapacityClass:
+    """One static shape class of the fleet (one compiled program per
+    client-capacity tier).
+
+    ``x (P, n_cap, *feat)`` / ``y (P, n_cap)`` are the device-resident
+    local shards of the class's ``P`` members, each padded to the class
+    max size ``n_cap`` (plans never index the padding).  ``tiers`` is
+    the ascending pow2 ladder of padded client-axis sizes an invocation
+    may use (every tier a multiple of the mesh data-axis size).
+    """
+
+    bs: int
+    step_cap: int            # padded step axis (multiple of 4)
+    tiers: List[int]         # padded client-axis capacities (ascending)
+    n_cap: int
+    members: np.ndarray      # (P,) global client ids
+    x: jnp.ndarray
+    y: jnp.ndarray
+
+    @property
+    def client_cap(self) -> int:
+        """Largest per-invocation client capacity (the top tier)."""
+        return self.tiers[-1]
+
+
+@dataclass
+class ClassBatch:
+    """One per-round invocation of a capacity class's program.
+
+    ``rows (C_cap,)`` int32 rows into the class store (0 for padding —
+    masked out), ``plans (C_cap, step_cap, bs)`` int32 local sample
+    indices, ``step_mask (C_cap, step_cap)`` float32, ``weights (C_cap,)``
+    float32 *global* FedAvg weights (over all invocations they sum to 1),
+    ``client_idx (C_cap,)`` int32 global ids (-1 for padding).
+    """
+
+    cls_id: int
+    rows: np.ndarray
+    plans: np.ndarray
+    step_mask: np.ndarray
+    weights: np.ndarray
+    client_idx: np.ndarray
+
+
+class FleetStore:
+    """Pack the whole fleet once; assemble cohorts as index tensors."""
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, clients,
+                 cfg: FLConfig, client_multiple: int = 1,
+                 cache: HostPlanCache | None = None):
+        self.cfg = cfg
+        self.cache = cache if cache is not None \
+            else HostPlanCache(x, y, clients, cfg.local_epochs)
+        n = len(clients)
+        total_steps = self.cache.steps * cfg.local_epochs
+        self.class_of = np.full((n,), -1, np.int64)
+        self.row_of = np.full((n,), -1, np.int64)
+
+        groups: Dict[tuple, List[int]] = {}
+        for i in range(n):
+            if self.cache.sizes[i] == 0:     # no steps, no FedAvg mass
+                continue
+            key = (int(self.cache.bs[i]),
+                   _next_pow2(max(int(total_steps[i]), 1)))
+            groups.setdefault(key, []).append(i)
+
+        # per-round winner bound: k_total overall, but per-cluster floors
+        # can push the union above it (num_clusters x K_j)
+        k_total = max(int(round(cfg.select_ratio * cfg.num_clients)), 1)
+        k_bound = max(k_total, cfg.num_clusters * k_per_cluster(cfg))
+        mult = max(int(client_multiple), 1)
+
+        self.classes: List[CapacityClass] = []
+        for (bs, _band), members in sorted(groups.items()):
+            members = np.asarray(members, np.int64)
+            n_cap = int(self.cache.sizes[members].max())
+            step_cap = _round_up(int(total_steps[members].max()), 4)
+            cap = min(len(members), k_bound)
+            # pow2 ladder 1, 2, 4, ... up to the winner bound, every tier
+            # rounded to the mesh data-axis multiple (rounding collapses
+            # small tiers on big meshes — dedupe keeps the set tight)
+            tiers, t = [], 1
+            while t < cap:
+                tiers.append(_round_up(t, mult))
+                t *= 2
+            tiers.append(_round_up(cap, mult))
+            tiers = sorted(set(tiers))
+            xb = np.zeros((len(members), n_cap) + x.shape[1:], x.dtype)
+            yb = np.zeros((len(members), n_cap), y.dtype)
+            for r, gid in enumerate(members):
+                xl, yl = self.cache.local_data(int(gid))
+                xb[r, :len(xl)] = xl
+                yb[r, :len(yl)] = yl
+                self.class_of[gid] = len(self.classes)
+                self.row_of[gid] = r
+            self.classes.append(CapacityClass(
+                bs=bs, step_cap=step_cap, tiers=tiers, n_cap=n_cap,
+                members=members, x=jnp.asarray(xb), y=jnp.asarray(yb)))
+
+    # ------------------------------------------------------------------
+    def _empty_batch(self, cls_id: int, tier: int) -> ClassBatch:
+        c = self.classes[cls_id]
+        return ClassBatch(
+            cls_id=cls_id,
+            rows=np.zeros((tier,), np.int32),
+            plans=np.zeros((tier, c.step_cap, c.bs), np.int32),
+            step_mask=np.zeros((tier, c.step_cap), np.float32),
+            weights=np.zeros((tier,), np.float32),
+            client_idx=np.full((tier,), -1, np.int32))
+
+    def warmup_batches(self) -> List[ClassBatch]:
+        """One fully-masked invocation per (class, tier): running each
+        through ``CohortEngine.train_class`` compiles every program the
+        fleet can ever need (classes and tiers are static), so the round
+        loop never traces."""
+        return [self._empty_batch(i, t)
+                for i, c in enumerate(self.classes) for t in c.tiers]
+
+    def assemble(self, sel_idx: np.ndarray,
+                 history: np.ndarray) -> List[ClassBatch]:
+        """Index tensors for the round's winners.  ``history`` is the
+        pre-round host participation mirror (seeds the shuffle rng).
+        Zero-size winners are dropped (same rule as the packers); an
+        all-zero cohort assembles to [] — skip aggregation."""
+        sel_idx = np.asarray(sel_idx)
+        if sel_idx.size:
+            sel_idx = sel_idx[self.cache.sizes[sel_idx] > 0]
+        if sel_idx.size == 0:
+            return []
+        sizes = self.cache.sizes[sel_idx].astype(np.float64)
+        pk = sizes / sizes.sum()
+
+        by_cls: Dict[int, List[tuple]] = {}
+        for i, p in zip(sel_idx, pk):
+            by_cls.setdefault(int(self.class_of[int(i)]), []).append(
+                (int(i), float(p)))
+
+        out = []
+        for cls_id, winners in sorted(by_cls.items()):
+            c = self.classes[cls_id]
+            lo = 0
+            while lo < len(winners):
+                rem = len(winners) - lo
+                # greedy largest tier that the remainder fills; when even
+                # the smallest tier is bigger, take it (padding < 2x rem)
+                fits = [t for t in c.tiers if t <= rem]
+                tier = fits[-1] if fits else c.tiers[0]
+                chunk = winners[lo:lo + tier]
+                lo += len(chunk)
+                b = self._empty_batch(cls_id, tier)
+                for r, (gid, p) in enumerate(chunk):
+                    plan = self.cache.plan(gid, int(history[gid]))
+                    s = plan.shape[0]
+                    b.rows[r] = self.row_of[gid]
+                    b.plans[r, :s] = plan
+                    b.step_mask[r, :s] = 1.0
+                    b.weights[r] = p
+                    b.client_idx[r] = gid
+                out.append(b)
+        return out

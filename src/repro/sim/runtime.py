@@ -12,14 +12,23 @@ training (selected via ``FLConfig.runtime`` / ``train.py --runtime``).
     and an on-mesh psum FedAvg reduction, so a round's local epochs run
     on every device of the mesh instead of one.  Degrades to the
     1-device debug mesh (same program, axis size 1) on a plain host.
+  * ``device`` — the device-resident fleet pipeline (repro.sim.fleet):
+    all clients' data is packed once at init into per-capacity-class
+    device tensors; per-round cohort assembly is an on-device gather by
+    winner rows driven by tiny host-built int plans, and the compiled
+    programs are keyed on *static* fleet-derived capacity classes so
+    nothing retraces after warm-up.  Composes with the cohort mesh: on a
+    multi-device host the per-invocation client axis is shard_map'd over
+    ``data`` with a psum FedAvg, same semantics as ``sharded``.
 
 All backends are bit-compatible in *behavior* (same shuffles, same batch
 boundaries, same FedAvg weights); results agree up to float
 reassociation.  The sequential backend stays the ground truth the
-vectorized and sharded ones are tested against (tests/test_sim.py).
+engine backends are tested against (tests/test_sim.py).
 """
 from __future__ import annotations
 
+import time
 from typing import Any, List, Optional, Protocol
 
 import jax
@@ -29,11 +38,12 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.core.adapters import ModelAdapter
 from repro.optim import apply_updates, fedprox_grad, sgd
-from repro.sim.cohort import (drop_zero_size_winners, pack_cohort,
-                              pack_feature_pass)
+from repro.sim.cohort import (HostPlanCache, drop_zero_size_winners,
+                              pack_cohort, pack_feature_pass)
 from repro.sim.engine import CohortEngine
+from repro.sim.fleet import FleetStore
 
-RUNTIMES = ("sequential", "vectorized", "sharded")
+RUNTIMES = ("sequential", "vectorized", "sharded", "device")
 
 
 def tree_weighted_sum(trees: List[Any], weights: np.ndarray):
@@ -153,16 +163,31 @@ class VectorizedRuntime(SequentialRuntime):
         super().__init__(cfg, adapter, x, y, clients)
         self.mesh = mesh
         self.engine = CohortEngine(adapter, cfg, mesh=mesh)
+        # memoized plan structure + per-client local data shards: packing
+        # rebuilds only the shuffle permutations per round
+        self.plan_cache = HostPlanCache(x, y, clients, cfg.local_epochs)
+        self.host_pack_s = 0.0   # cumulative host-side packing time
+
+    def _pack(self, sel_idx, history, client_multiple=1):
+        t0 = time.perf_counter()
+        buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
+                              history, self.cfg,
+                              client_multiple=client_multiple,
+                              cache=self.plan_cache)
+        self.host_pack_s += time.perf_counter() - t0
+        return buckets
 
     def train_cohort(self, global_params, sel_idx, history):
-        buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
-                              history, self.cfg)
-        return self.engine.train_cohort(global_params, buckets)
+        return self.engine.train_cohort(global_params,
+                                        self._pack(sel_idx, history))
 
     def cluster_features(self, global_params, key, feature_kind):
         if feature_kind == "weights":
+            # the cache's epochs field is unused by the feature plan (one
+            # in-order epoch); sharing it reuses the local data gathers
             buckets = pack_feature_pass(self.x, self.y, self.clients,
-                                        chunk_width=self.cfg.cohort_vmap_width)
+                                        chunk_width=self.cfg.cohort_vmap_width,
+                                        cache=self.plan_cache)
             return self.engine.weight_features(global_params, buckets,
                                                len(self.clients))
         return self.engine.gradient_features(
@@ -210,10 +235,69 @@ class ShardedRuntime(VectorizedRuntime):
         super().__init__(cfg, adapter, x, y, clients, mesh=mesh)
 
     def train_cohort(self, global_params, sel_idx, history):
-        buckets = pack_cohort(self.x, self.y, self.clients, sel_idx,
-                              history, self.cfg,
-                              client_multiple=self.engine.data_axis_size)
+        buckets = self._pack(sel_idx, history,
+                             client_multiple=self.engine.data_axis_size)
         return self.engine.train_cohort(global_params, buckets)
+
+
+# ----------------------------------------------------------------------
+class DeviceRuntime(VectorizedRuntime):
+    """Device-resident fleet backend (repro.sim.fleet): the whole fleet's
+    data lives on device in static capacity-class tensors; per-round host
+    work shrinks to assembling tiny int index plans (winner rows + the
+    oracle's shuffle permutations), and every compiled program is keyed
+    on a fleet-derived class shape, so nothing retraces after
+    :meth:`warmup`.  On a multi-device host the per-invocation client
+    axis is shard_map'd over the cohort mesh's ``data`` axis (replicated
+    store, psum FedAvg) — same semantics as the sharded runtime.
+    Clustering feature passes inherit the vectorized path (their logs
+    must stay bit-identical across runtimes)."""
+
+    name = "device"
+
+    def __init__(self, cfg, adapter, x, y, clients, mesh=None):
+        if mesh is None:
+            from repro.launch.mesh import make_cohort_mesh
+            m = make_cohort_mesh(cfg.cohort_mesh_devices)
+            # the 1-device debug mesh would only add shard_map overhead
+            mesh = m if m.shape["data"] > 1 else None
+        super().__init__(cfg, adapter, x, y, clients, mesh=mesh)
+        self.store = FleetStore(x, y, clients, cfg,
+                                client_multiple=self.engine.data_axis_size,
+                                cache=self.plan_cache)
+        # the class tensors now hold the fleet on device — don't keep a
+        # host duplicate of the whole pool alive for the rest of the run
+        # (a feature pass lazily re-gathers what it needs, once)
+        self.plan_cache.drop_local_data()
+        self._warmed = False
+
+    def warmup(self, global_params):
+        """Compile every capacity class's program up front (one fully
+        masked invocation per (class, tier)) so the round loop never
+        traces.  Idempotent: re-running (e.g. a second ``run()`` call)
+        would re-dispatch real masked scans against a hot jit cache."""
+        if self._warmed:
+            return
+        for b in self.store.warmup_batches():
+            c = self.store.classes[b.cls_id]
+            jax.block_until_ready(self.engine.train_class(
+                global_params, c.x, c.y, b.rows, b.plans, b.step_mask,
+                b.weights))
+        self._warmed = True
+
+    def train_cohort(self, global_params, sel_idx, history):
+        t0 = time.perf_counter()
+        batches = self.store.assemble(sel_idx, np.asarray(history))
+        self.host_pack_s += time.perf_counter() - t0
+        agg = None
+        for b in batches:
+            c = self.store.classes[b.cls_id]
+            part = self.engine.train_class(global_params, c.x, c.y,
+                                           b.rows, b.plans, b.step_mask,
+                                           b.weights)
+            agg = part if agg is None else jax.tree.map(jnp.add, agg,
+                                                        part)
+        return agg
 
 
 # ----------------------------------------------------------------------
@@ -225,5 +309,7 @@ def make_runtime(cfg: FLConfig, adapter: ModelAdapter, x, y,
         return VectorizedRuntime(cfg, adapter, x, y, clients)
     if cfg.runtime == "sharded":
         return ShardedRuntime(cfg, adapter, x, y, clients)
+    if cfg.runtime == "device":
+        return DeviceRuntime(cfg, adapter, x, y, clients)
     raise ValueError(
         f"unknown FLConfig.runtime={cfg.runtime!r}; expected {RUNTIMES}")

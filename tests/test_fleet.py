@@ -1,0 +1,213 @@
+"""Device-resident fleet pipeline (repro.sim.fleet + the ``device``
+runtime): plan-cache/oracle bit-equality, capacity-class invariants, the
+compile-once guarantee (zero retraces across shifting cohorts), and the
+server's async round loop (fused eval, eval cadence, deferred metric
+fetches)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core.adapters import cnn_adapter
+from repro.core.server import FederatedServer
+from repro.data.partition import partition_clients
+from repro.data.synthetic import make_image_dataset
+from repro.sim.cohort import HostPlanCache, oracle_batch_plan
+from repro.sim.fleet import FleetStore
+from repro.sim.runtime import make_runtime
+
+N_CLIENTS = 10
+POOL = 700
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N_CLIENTS, num_clusters=3, select_ratio=0.4,
+                rounds=2, local_epochs=2, sample_window=10,
+                cluster_resamples=2, init_energy_mode="normal", seed=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_image_dataset("mnist", n_train=POOL, n_test=120,
+                                     seed=3)
+    return train, test
+
+
+@pytest.fixture(scope="module")
+def clients(data):
+    train, _ = data
+    return partition_clients(train.y, _cfg(), seed=3)
+
+
+# ----------------------------------------------------------------------
+# host plan cache: permutation-only rebuild == the oracle's full plan
+# ----------------------------------------------------------------------
+
+def test_plan_cache_matches_oracle(data, clients):
+    train, _ = data
+    cfg = _cfg()
+    cache = HostPlanCache(train.x, train.y, clients, cfg.local_epochs)
+    for i in range(N_CLIENTS):
+        for hist in (0, 1, 5):
+            n = clients[i].size
+            bs = min(32, n)
+            rng = np.random.default_rng(hist * 977 + i)
+            ref = oracle_batch_plan(n, bs, cfg.local_epochs, rng)
+            got = cache.plan(i, hist)
+            assert (got == ref).all()
+            # local gather == global gather through the shard
+            xl, yl = cache.local_data(i)
+            shard = np.asarray(clients[i].train_idx)
+            assert (xl[got] == train.x[shard[ref]]).all()
+            assert (yl[got] == train.y[shard[ref]]).all()
+
+
+# ----------------------------------------------------------------------
+# capacity classes: static cover of the fleet
+# ----------------------------------------------------------------------
+
+def test_capacity_classes_cover_fleet(data, clients):
+    train, _ = data
+    cfg = _cfg()
+    store = FleetStore(train.x, train.y, clients, cfg)
+    seen = set()
+    for cls_id, c in enumerate(store.classes):
+        for r, gid in enumerate(c.members):
+            assert store.class_of[gid] == cls_id
+            assert store.row_of[gid] == r
+            assert gid not in seen
+            seen.add(int(gid))
+            # the client's whole plan fits the class capacities
+            n = clients[gid].size
+            assert min(32, n) == c.bs
+            assert n <= c.n_cap
+            total = (n // c.bs) * cfg.local_epochs
+            assert total <= c.step_cap
+            # the resident row is exactly the client's local shard
+            xl, yl = store.cache.local_data(int(gid))
+            assert (np.asarray(c.x[r, :n]) == xl).all()
+            assert (np.asarray(c.y[r, :n]) == yl).all()
+        assert c.tiers == sorted(set(c.tiers))
+        assert c.step_cap % 4 == 0
+    assert seen == {i for i in range(N_CLIENTS) if clients[i].size > 0}
+
+
+def test_assemble_weights_and_masks(data, clients):
+    train, _ = data
+    cfg = _cfg()
+    store = FleetStore(train.x, train.y, clients, cfg)
+    sel = np.arange(N_CLIENTS)
+    hist = np.arange(N_CLIENTS) % 3
+    batches = store.assemble(sel, hist)
+    sizes = np.array([c.size for c in clients], np.float64)
+    pk = sizes / sizes.sum()
+    seen = {}
+    total_w = 0.0
+    for b in batches:
+        c = store.classes[b.cls_id]
+        assert len(b.rows) in c.tiers
+        for r, gid in enumerate(b.client_idx):
+            if gid < 0:                       # padding row: fully masked
+                assert b.step_mask[r].sum() == 0
+                assert b.weights[r] == 0
+                continue
+            n = clients[gid].size
+            steps = (n // min(32, n)) * cfg.local_epochs
+            assert b.rows[r] == store.row_of[gid]
+            assert b.step_mask[r].sum() == steps
+            assert b.weights[r] == pytest.approx(pk[gid])
+            seen[int(gid)] = seen.get(int(gid), 0) + 1
+        total_w += float(b.weights.sum())
+    assert sorted(seen) == list(range(N_CLIENTS))   # each winner once
+    assert total_w == pytest.approx(1.0)
+    assert store.assemble(np.array([], np.int64), hist) == []
+
+
+# ----------------------------------------------------------------------
+# compile-once policy: zero retraces across shifting cohorts
+# ----------------------------------------------------------------------
+
+def test_device_runtime_zero_retrace_across_shifting_cohorts(data,
+                                                             clients):
+    train, _ = data
+    cfg = _cfg(runtime="device")
+    adapter = cnn_adapter("mnist")
+    params = adapter.init(jax.random.PRNGKey(0))
+    rt = make_runtime(cfg, adapter, train.x, train.y, clients)
+    rt.warmup(params)
+    warm = dict(rt.engine.stats)
+    assert warm["traces"] == sum(len(c.tiers) for c in rt.store.classes)
+    hist = np.zeros(N_CLIENTS, np.int64)
+    # 3+ rounds with shifting cohort sizes AND compositions, including
+    # one bigger than any tier (chunked invocations reuse the shapes)
+    for sel in (np.arange(N_CLIENTS), np.array([0, 3]),
+                np.array([1, 4, 6, 7, 9]), np.array([2])):
+        p = rt.train_cohort(params, sel, hist)
+        assert p is not None
+        hist[sel] += 1
+    after = rt.engine.stats
+    assert after["traces"] == warm["traces"], (warm, after)
+    assert after["shape_misses"] == warm["shape_misses"], (warm, after)
+    assert after["shape_hits"] > warm["shape_hits"]
+
+
+# ----------------------------------------------------------------------
+# async server loop: fused eval, cadence, deferred fetches
+# ----------------------------------------------------------------------
+
+def _server(cfg, data):
+    train, test = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    return FederatedServer(cfg, cnn_adapter("mnist"), train.x, train.y,
+                           clients, {"x": test.x[:64], "y": test.y[:64]})
+
+
+def test_fused_eval_matches_separate_calls(data):
+    srv = _server(_cfg(), data)
+    acc, loss = jax.device_get(srv._eval_step(srv.params, srv._test_dev))
+    assert float(acc) == float(srv.adapter.accuracy(srv.params,
+                                                    srv.test_batch))
+    assert float(loss) == float(srv.adapter.loss(srv.params,
+                                                 srv.test_batch))
+
+
+@pytest.mark.parametrize("runtime", ("sequential", "device"))
+def test_eval_every_cadence_and_equivalence(data, runtime):
+    """eval_every>1 must change ONLY which rounds carry eval scalars:
+    selection/energy logs and final params stay identical, skipped
+    rounds log NaN, the final round always evaluates."""
+    rounds = 5
+    every = _server(_cfg(runtime=runtime, rounds=rounds), data)
+    sparse = _server(_cfg(runtime=runtime, rounds=rounds, eval_every=3),
+                     data)
+    logs_e = every.run()
+    logs_s = sparse.run()
+    assert [not math.isnan(l.test_acc) for l in logs_s] == \
+        [True, False, False, True, True]
+    for le, ls in zip(logs_e, logs_s):
+        assert (le.selected == ls.selected).all()
+        assert le.energy_std == ls.energy_std
+        assert le.mean_bid == ls.mean_bid
+        assert le.client_reward_sum == ls.client_reward_sum
+        if not math.isnan(ls.test_acc):
+            assert le.test_acc == ls.test_acc
+            assert le.test_loss == ls.test_loss
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        every.params, sparse.params)))
+    assert diff == 0.0
+    assert every.total_client_reward == pytest.approx(
+        sparse.total_client_reward)
+
+
+def test_run_round_flushes_immediately(data):
+    srv = _server(_cfg(runtime="device"), data)
+    log = srv.run_round(0)
+    assert srv._pending == []
+    assert log.round == 0 and np.isfinite(log.test_acc)
+    assert len(srv.logs) == 1

@@ -22,7 +22,7 @@ from repro.sim.cohort import (oracle_batch_plan, pack_cohort,
                               sequential_batch_plan)
 from repro.sim.runtime import make_runtime
 
-ENGINE_RUNTIMES = ("vectorized", "sharded")
+ENGINE_RUNTIMES = ("vectorized", "sharded", "device")
 
 # small pool + strong imbalance: some clients hold fewer than 32 train
 # samples, so packing produces several batch-size buckets and clients
@@ -167,7 +167,7 @@ def test_train_cohort_matches_oracle(data, runtime):
     assert _max_param_diff(p_seq, p_eng) < 1e-4
 
 
-@pytest.mark.parametrize("runtime", ("vectorized", "sharded"))
+@pytest.mark.parametrize("runtime", ENGINE_RUNTIMES)
 def test_train_cohort_empty_is_noop(data, runtime):
     cfg = _cfg(runtime=runtime)
     train, _ = data
@@ -184,7 +184,8 @@ def _zero_size_client() -> ClientData:
     return ClientData(train_idx=e, val_idx=e, test_idx=e, primary_label=0)
 
 
-@pytest.mark.parametrize("runtime", ("sequential", "vectorized", "sharded"))
+@pytest.mark.parametrize("runtime",
+                         ("sequential",) + ENGINE_RUNTIMES)
 def test_all_zero_size_cohort_skips_aggregation(data, runtime):
     """Winners with no local samples must not zero the global params: an
     all-zero cohort returns None (the old sequential path multiplied the
@@ -242,6 +243,9 @@ def test_weight_features_missing_client_raises(data):
     ("gradient_cluster_auction", "fedavg", "vectorized"),
     ("gradient_cluster_auction", "fedprox", "vectorized"),
     ("gradient_cluster_auction", "fedavg", "sharded"),
+    ("random", "fedavg", "device"),
+    ("gradient_cluster_auction", "fedavg", "device"),
+    ("gradient_cluster_auction", "fedprox", "device"),
 ])
 def test_full_loop_equivalence(data, scheme, aggregator, runtime):
     """Engine runtimes produce identical RoundLog selection/energy fields
@@ -281,24 +285,29 @@ cfg = FLConfig(num_clients=10, num_clusters=3, select_ratio=0.4, rounds=2,
 train, test = make_image_dataset("mnist", n_train=700, n_test=120, seed=3)
 adapter = cnn_adapter("mnist")
 logs, params = {}, {}
-for rt in ("vectorized", "sharded"):
+for rt in ("vectorized", "sharded", "device"):
     clients = partition_clients(train.y, cfg, seed=3)
     srv = FederatedServer(cfg.replace(runtime=rt), adapter, train.x,
                           train.y, clients,
                           {"x": test.x[:64], "y": test.y[:64]})
-    if rt == "sharded":
+    if rt in ("sharded", "device"):
         assert srv.runtime.engine.data_axis_size == 8, \
             srv.runtime.engine.data_axis_size
+    if rt == "device":
+        # every tier must split evenly across the 8-way data axis
+        for c in srv.runtime.store.classes:
+            assert all(t % 8 == 0 for t in c.tiers), c.tiers
     logs[rt] = srv.run()
     params[rt] = srv.params
-for l_v, l_s in zip(logs["vectorized"], logs["sharded"]):
-    assert (l_v.selected == l_s.selected).all()
-    assert l_v.energy_std == l_s.energy_std
-    assert l_v.mean_bid == l_s.mean_bid
-diff = max(jax.tree.leaves(jax.tree.map(
-    lambda a, b: float(jnp.max(jnp.abs(a - b))),
-    params["vectorized"], params["sharded"])))
-assert diff < 1e-4, diff
+for other in ("sharded", "device"):
+    for l_v, l_s in zip(logs["vectorized"], logs[other]):
+        assert (l_v.selected == l_s.selected).all()
+        assert l_v.energy_std == l_s.energy_std
+        assert l_v.mean_bid == l_s.mean_bid
+    diff = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        params["vectorized"], params[other])))
+    assert diff < 1e-4, (other, diff)
 print("FORCED_MESH_OK", diff)
 """
 
