@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _t(fn, n=5, warmup=2):
@@ -36,6 +37,29 @@ def _save(name, obj):
     os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"{name}.json"), "w") as f:
         json.dump(obj, f, indent=1)
+
+
+def _git_commit() -> str:
+    import subprocess
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _summary(name, **headline):
+    """Write the top-level ``BENCH_<name>.json`` perf-trajectory summary:
+    the benchmark's headline numbers stamped with wall time + commit, so
+    ``git log -p BENCH_round_pipeline.json`` IS the perf history."""
+    rec = {"bench": name, "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+           "commit": _git_commit(), **headline}
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+        f.write("\n")
 
 
 # ----------------------------------------------------------------------
@@ -113,6 +137,9 @@ def bench_clustering(quick: bool):
         _row(f"kmeans_fused_N{n}", us_new, derived)
         out[n] = row
     _save("clustering", out)
+    top = out[max(out)]
+    _summary("clustering", N=top["N"], fused_us=top["fused_us"],
+             speedup=top.get("speedup"))
 
 
 # ----------------------------------------------------------------------
@@ -170,6 +197,10 @@ def bench_selection(quick: bool):
         _row(f"selection_rounds_fused_N{n}", us_f / T, derived)
         out[n] = row
     _save("selection", out)
+    top = out[max(out)]
+    _summary("selection", N=top["N"], T=top["T"],
+             warm_rounds_per_s=top["fused_rounds_per_s"],
+             compile_s=top["compile_s"], speedup=top.get("speedup"))
 
 
 # ----------------------------------------------------------------------
@@ -217,6 +248,9 @@ def bench_cohort_engine(quick: bool):
         _row(f"cohort_engine_vec_C{c}", us_v, f"speedup={speedup:.2f}x")
         out[c] = {"seq_us": us_s, "vec_us": us_v, "speedup": speedup}
     _save("cohort_engine", out)
+    top = out[max(out)]
+    _summary("cohort_engine", cohort=max(out), vec_us=top["vec_us"],
+             speedup=top["speedup"])
 
 
 # ----------------------------------------------------------------------
@@ -276,6 +310,10 @@ def bench_cohort_sharded(quick: bool):
                   "max_param_diff": diff,
                   "compile_s": max(cold_s - us_s / 1e6, 0.0)}
     _save("cohort_sharded", out)
+    big = max(c for c in out if isinstance(c, int))
+    _summary("cohort_sharded", devices=n_dev, cohort=big,
+             sharded_us=out[big]["sharded_us"],
+             speedup=out[big]["speedup"])
 
 
 # ----------------------------------------------------------------------
@@ -352,6 +390,11 @@ def bench_round_pipeline(quick: bool):
     _row("round_pipeline_speedup", 0.0,
          f"device_vs_vectorized={out['speedup']:.2f}x")
     _save("round_pipeline", out)
+    _summary("round_pipeline", cohort=cohort, clients=nclients,
+             warm_rounds_per_s=out["device"]["rounds_per_s"],
+             vectorized_rounds_per_s=out["vectorized"]["rounds_per_s"],
+             retraces_warm=out["device"]["retraces_warm"],
+             speedup=out["speedup"])
 
 
 # ----------------------------------------------------------------------
@@ -489,15 +532,20 @@ BENCHES = {
 
 
 def main() -> None:
+    from repro import obs
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help=f"comma list of {list(BENCHES)}")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the selected "
+                         "benchmarks for TensorBoard/Perfetto")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
-    for n in names:
-        BENCHES[n](args.quick)
+    with obs.maybe_profile(args.profile_dir):
+        for n in names:
+            BENCHES[n](args.quick)
 
 
 if __name__ == "__main__":

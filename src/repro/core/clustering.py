@@ -29,6 +29,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.kernels import ops as KOPS
 
@@ -167,6 +168,7 @@ def _kmeans_batched(features, key, *, k: int, iters: int, restarts: int,
     """One compiled program for the whole stage: incremental k-means++
     seeding, Lloyd iterations, and the restart-argmin — all ``restarts``
     runs vmapped, no Python loop and no per-restart host sync."""
+    obs.jax_stats.note_trace("kmeans")   # fires at (re)trace time only
     n = features.shape[0]
     feats32 = features.astype(jnp.float32)
 
@@ -282,20 +284,25 @@ def cluster_clients(grad_fn: Callable, params, client_data, cfg: FLConfig,
     if precomputed_feats is not None:
         feats = precomputed_feats
     else:
-        feats = []
-        for i in range(n):
-            x, y = client_data[i]
-            ki = jax.random.fold_in(key, i)
-            if feature_kind == "gradient":
-                f = client_gradient_feature(grad_fn, params, x, y,
-                                            x.shape[0], cfg, ki)
-            else:
-                f = local_steps_fn(params, x, y, ki)
-            feats.append(f)
-        feats = jnp.stack(feats)
+        with obs.span("cluster/features", feature=feature_kind,
+                      runtime="reference"):
+            feats = []
+            for i in range(n):
+                x, y = client_data[i]
+                ki = jax.random.fold_in(key, i)
+                if feature_kind == "gradient":
+                    f = client_gradient_feature(grad_fn, params, x, y,
+                                                x.shape[0], cfg, ki)
+                else:
+                    f = local_steps_fn(params, x, y, ki)
+                feats.append(f)
+            feats = jnp.stack(feats)
     if feats.shape[1] > cfg.cluster_feature_dim * 8:
-        feats = project_features_blocked(jax.random.PRNGKey(1234), feats,
-                                         cfg.cluster_feature_dim)
-    labels, cent = kmeans(feats, cfg.num_clusters, key,
-                          assign_fn=assign_fn)
+        with obs.span("cluster/project", dim=int(feats.shape[1])):
+            feats = project_features_blocked(jax.random.PRNGKey(1234),
+                                             feats,
+                                             cfg.cluster_feature_dim)
+    with obs.span("cluster/kmeans", k=cfg.num_clusters):
+        labels, cent = kmeans(feats, cfg.num_clusters, key,
+                              assign_fn=assign_fn)
     return labels, cent, feats

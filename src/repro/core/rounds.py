@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core import auction as A
 from repro.core import energy as E
@@ -66,6 +67,7 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
     traced identically by the jitted step, the scan path and the eager
     reference (modulo ``winners_impl``, whose implementations are
     bit-identical), which is what makes the three bit-comparable."""
+    obs.jax_stats.note_trace("round_step")   # fires at (re)trace time only
     win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl)
     bids = info["bids"]
     client_r, server_r = round_rewards(win, bids, state.local_sizes, cfg)

@@ -30,14 +30,14 @@ which stage-3's host-seeded shuffle rng genuinely needs.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core import clustering as CL
 from repro.core import energy as EN
@@ -117,10 +117,16 @@ class FederatedServer:
         # nested jits inline), so an eval round costs one deferred fetch
         # instead of two blocking ones; the test batch is committed to
         # device once instead of being re-transferred per round.
-        self._eval_step = jax.jit(
-            lambda p, b: (adapter.accuracy(p, b), adapter.loss(p, b)))
-        self._test_dev = jax.device_put(test_batch)
+        def _eval(p, b):
+            obs.jax_stats.note_trace("eval")     # trace-time side effect
+            return adapter.accuracy(p, b), adapter.loss(p, b)
+
+        self._eval_step = jax.jit(_eval)
+        self._test_dev = obs.device_put(test_batch)
         self._pending: List[_PendingRound] = []
+        # last eval pair actually drained (progress prints show this
+        # instead of forcing an off-cadence eval — see run())
+        self._last_eval = (float("nan"), float("nan"))
 
     # ------------------------------------------------------------------
     def _next_key(self):
@@ -188,24 +194,33 @@ class FederatedServer:
         host-seeded shuffle rng needs it — while the metric scalars (and
         the fused eval pair, when due) stay on device in the pending
         buffer until the next logging boundary."""
-        new_state, win, metrics = self._round_step(self.state,
-                                                   self._next_key())
-        win_np = jax.device_get(win)
-        sel_idx = np.nonzero(win_np)[0]
+        with obs.span("round/dispatch", round=t):
+            with obs.span("round/select", round=t):
+                new_state, win, metrics = self._round_step(self.state,
+                                                           self._next_key())
+                # the one unconditional per-round fetch (explicit, counted)
+                win_np = obs.device_get(win)
+                sel_idx = np.nonzero(win_np)[0]
 
-        # stage 3: local training + aggregation (cohort runtime backend);
-        # shuffle seeds read the pre-round host history mirror
-        new_params = self.runtime.train_cohort(
-            self.params, sel_idx, self._host_history)
-        if new_params is not None:
-            self.params = new_params
+            # stage 3: local training + aggregation (cohort runtime
+            # backend); shuffle seeds read the pre-round host history
+            # mirror
+            with obs.span("round/train", round=t,
+                          cohort=int(sel_idx.size)):
+                new_params = self.runtime.train_cohort(
+                    self.params, sel_idx, self._host_history)
+            if new_params is not None:
+                self.params = new_params
 
-        self.state = new_state
-        self._host_history[sel_idx] += 1
-        ev = self._eval_step(self.params, self._test_dev) if eval_now \
-            else None
-        self._pending.append(_PendingRound(
-            round=t, selected=sel_idx, metrics=metrics, eval_pair=ev))
+            self.state = new_state
+            self._host_history[sel_idx] += 1
+            if eval_now:
+                with obs.span("round/eval", round=t):
+                    ev = self._eval_step(self.params, self._test_dev)
+            else:
+                ev = None
+            self._pending.append(_PendingRound(
+                round=t, selected=sel_idx, metrics=metrics, eval_pair=ev))
 
     def _flush_pending(self) -> None:
         """Drain the pending buffer with ONE batched device_get and turn
@@ -213,11 +228,15 @@ class FederatedServer:
         the values — they were computed by the same programs)."""
         if not self._pending:
             return
-        fetched = jax.device_get(
-            [(p.metrics, p.eval_pair) for p in self._pending])
+        with obs.span("round/drain", rounds=len(self._pending),
+                      first=self._pending[0].round):
+            fetched = obs.device_get(
+                [(p.metrics, p.eval_pair) for p in self._pending])
         for p, (m, ev) in zip(self._pending, fetched):
             acc, loss = ((float(ev[0]), float(ev[1])) if ev is not None
                          else (float("nan"), float("nan")))
+            if ev is not None:
+                self._last_eval = (acc, loss)
             self.total_client_reward += float(m["client_reward_sum"])
             self.logs.append(RoundLog(
                 round=p.round, selected=p.selected, test_acc=acc,
@@ -226,7 +245,18 @@ class FederatedServer:
                 server_reward=float(m["server_reward"]),
                 client_reward_sum=float(m["client_reward_sum"]),
                 vds_gap=float(m["vds_gap"])))
+            # per-round series row: every scalar is already a host float
+            # from the batched fetch above — recording adds no sync
+            obs.OBS.record_round(
+                p.round, test_acc=acc, test_loss=loss,
+                energy_std=float(m["energy_std"]),
+                mean_bid=float(m["mean_bid"]),
+                server_reward=float(m["server_reward"]),
+                client_reward_sum=float(m["client_reward_sum"]),
+                vds_gap=float(m["vds_gap"]),
+                num_selected=int(p.selected.size))
         self._pending.clear()
+        obs.flush()        # the logging boundary: sinks see I/O only here
 
     def run_round(self, t: int) -> RoundLog:
         """One synchronous FL round (dispatch + immediate flush) — the
@@ -236,24 +266,41 @@ class FederatedServer:
         return self.logs[-1]
 
     # ------------------------------------------------------------------
-    def run(self, rounds: Optional[int] = None, verbose: bool = False):
-        self.cluster()
+    def run(self, rounds: Optional[int] = None, verbose: bool = False,
+            audit_sync: bool = False, audit_warm_rounds: int = 2):
+        """The async round loop.  ``verbose`` prints a progress line
+        every 5 rounds showing the *last drained* eval (NaN until one
+        drains) — verbosity must never change the measured eval cadence
+        (it used to force an eval at every print boundary, so logs and
+        params depended on the flag; regression-tested in
+        tests/test_obs.py).  ``audit_sync`` wraps every dispatch from
+        round ``audit_warm_rounds`` on in the transfer-guard sync
+        auditor: an implicit host transfer inside the warm loop raises
+        at the offending op (obs.sync_audit)."""
+        with obs.span("run/cluster", scheme=self.cfg.scheme):
+            self.cluster()
         warmup = getattr(self.runtime, "warmup", None)
         if warmup is not None:    # device runtime: compile every class
-            warmup(self.params)
+            with obs.span("run/warmup"):
+                warmup(self.params)
         T = rounds if rounds is not None else self.cfg.rounds
         for t in range(T):
-            # verbose print boundaries force an eval so the progress
-            # line never shows NaN on an off-cadence round
             printing = verbose and (t % 5 == 0 or t == T - 1)
-            self._dispatch_round(
-                t, printing or self._eval_due(t, final=t == T - 1))
+            if audit_sync and t >= audit_warm_rounds:
+                with obs.sync_audit():
+                    self._dispatch_round(t, self._eval_due(t,
+                                                           final=t == T - 1))
+            else:
+                self._dispatch_round(t, self._eval_due(t,
+                                                       final=t == T - 1))
             if printing:
                 self._flush_pending()
                 log = self.logs[-1]
-                print(f"  round {t:3d} acc={log.test_acc:.3f} "
-                      f"loss={log.test_loss:.3f} "
-                      f"E_std={log.energy_std:.3f} bid={log.mean_bid:.3f} "
-                      f"vds_gap={log.vds_gap:.3f}")
+                acc, loss = self._last_eval
+                obs.log(f"  round {t:3d} acc={acc:.3f} "
+                        f"loss={loss:.3f} "
+                        f"E_std={log.energy_std:.3f} "
+                        f"bid={log.mean_bid:.3f} "
+                        f"vds_gap={log.vds_gap:.3f}")
         self._flush_pending()
         return self.logs

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import INPUT_SHAPES, SHAPES_BY_NAME, ShapeConfig
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch import specs as SP
@@ -402,7 +403,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
                 continue
             sizes[f"{dt}[{dims}]"] = _tensor_bytes(dt, dims)
         for kk, vv in sizes.most_common(12):
-            print(f"    {vv/2**30:8.2f} GiB  {kk}")
+            obs.log(f"    {vv/2**30:8.2f} GiB  {kk}")
 
     rec.update(
         status="ok",
@@ -417,11 +418,11 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
         hlo_bytes=len(hlo),
     )
     # the two headline numbers, printed per prompt requirements
-    print(f"[{arch} x {shape_name} x {rec['mesh']}] "
-          f"compile ok in {t_compile:.1f}s; "
-          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev; "
-          f"flops={cost.get('flops', 0):.3g}; "
-          f"collective={coll['total']/2**20:.1f} MiB/dev")
+    obs.log(f"[{arch} x {shape_name} x {rec['mesh']}] "
+            f"compile ok in {t_compile:.1f}s; "
+            f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f} GiB/dev; "
+            f"flops={cost.get('flops', 0):.3g}; "
+            f"collective={coll['total']/2**20:.1f} MiB/dev")
     return rec
 
 
@@ -451,7 +452,10 @@ def main():
     ap.add_argument("--suffix", default="", help="result filename suffix")
     ap.add_argument("--subprocess-per-combo", action="store_true",
                     help="isolate each combo in a fresh process")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress per-combo progress lines")
     args = ap.parse_args()
+    obs.configure(quiet=args.quiet)
 
     archs = ARCH_IDS if args.arch in (None, "all") else [args.arch]
     shapes = ([s.name for s in INPUT_SHAPES]
@@ -493,15 +497,15 @@ def main():
                            "status": "error", "error": repr(e),
                            "traceback": traceback.format_exc()[-4000:]}
                     failures.append((arch, shp, mp, repr(e)))
-                    print(f"[{arch} x {shp}] FAILED: {e!r}")
+                    obs.log(f"[{arch} x {shp}] FAILED: {e!r}")
                 with open(out, "w") as f:
                     json.dump(rec, f, indent=1)
     if failures:
-        print(f"\n{len(failures)} dry-run failures:")
+        obs.log(f"\n{len(failures)} dry-run failures:")
         for f4 in failures:
-            print("  ", f4[:3], f4[3][:200])
+            obs.log(f"   {f4[:3]} {f4[3][:200]}")
         sys.exit(1)
-    print("\nall dry-runs ok")
+    obs.log("\nall dry-runs ok")
 
 
 if __name__ == "__main__":

@@ -45,6 +45,7 @@ import json
 import os
 from typing import Dict, List
 
+from repro import obs
 from repro.configs.base import SHAPES_BY_NAME
 from repro.configs.registry import get_config
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -203,29 +204,31 @@ def main():
     ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
     ap.add_argument("--suffix", default="")
     ap.add_argument("--json-out", default=None)
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+    obs.configure(quiet=args.quiet)
 
     recs = load_records(args.mesh, args.suffix)
     rows = []
     hdr = (f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
            f"{'collective':>10s} {'dominant':>10s} {'useful':>7s} "
            f"{'MFU':>7s} {'tempGiB':>8s}")
-    print(hdr)
-    print("-" * len(hdr))
+    obs.log(hdr)
+    obs.log("-" * len(hdr))
     for rec in recs:
         t = roofline_terms(rec)
         row = {"arch": rec["arch"], "shape": rec["shape"],
                "mesh": rec["mesh"], **t}
         rows.append(row)
         if t.get("status") != "ok":
-            print(f"{rec['arch']:22s} {rec['shape']:12s} "
-                  f"-- {t['status']}: {t.get('reason','')}")
+            obs.log(f"{rec['arch']:22s} {rec['shape']:12s} "
+                    f"-- {t['status']}: {t.get('reason','')}")
             continue
-        print(f"{rec['arch']:22s} {rec['shape']:12s} "
-              f"{t['compute_s']*1e3:8.2f}m {t['memory_s']*1e3:8.2f}m "
-              f"{t['collective_s']*1e3:9.2f}m {t['dominant']:>10s} "
-              f"{t['useful_ratio']:7.2%} {t['mfu']:7.2%} "
-              f"{t['temp_gib']:8.2f}")
+        obs.log(f"{rec['arch']:22s} {rec['shape']:12s} "
+                f"{t['compute_s']*1e3:8.2f}m {t['memory_s']*1e3:8.2f}m "
+                f"{t['collective_s']*1e3:9.2f}m {t['dominant']:>10s} "
+                f"{t['useful_ratio']:7.2%} {t['mfu']:7.2%} "
+                f"{t['temp_gib']:8.2f}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(rows, f, indent=1)

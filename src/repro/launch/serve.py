@@ -12,6 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.registry import get_smoke_config
 from repro.launch.steps import make_serve_step
 from repro.models import model as MD
@@ -25,7 +26,9 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--kv-dtype", default=None,
                     choices=[None, "bfloat16", "int8"])
+    ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args()
+    obs.configure(quiet=args.quiet)
 
     cfg = get_smoke_config(args.arch)
     if args.kv_dtype:
@@ -60,10 +63,10 @@ def main():
     jax.block_until_ready(tok)
     dt = time.time() - t0
     gen = jnp.stack(generated, axis=1)
-    print(f"arch={cfg.name} batch={B} generated {args.gen} tokens/seq "
-          f"in {dt:.2f}s -> {B * args.gen / dt:.1f} tok/s "
-          f"(kv={cfg.kv_cache_dtype})")
-    print("sample token ids:", gen[0, :16].tolist())
+    obs.log(f"arch={cfg.name} batch={B} generated {args.gen} tokens/seq "
+            f"in {dt:.2f}s -> {B * args.gen / dt:.1f} tok/s "
+            f"(kv={cfg.kv_cache_dtype})")
+    obs.log(f"sample token ids: {gen[0, :16].tolist()}")
 
 
 if __name__ == "__main__":

@@ -63,6 +63,9 @@ Usage:
       --arch qwen2-0.5b --rounds 3
   PYTHONPATH=src python -m repro.launch.train --mode selection \
       --clients 1000000 --clusters 100 --rounds 1000
+  PYTHONPATH=src python -m repro.launch.train --mode paper \
+      --runtime device --rounds 30 --log-jsonl runs/events.jsonl \
+      --audit-sync            # structured telemetry + sync audit
 """
 from __future__ import annotations
 
@@ -74,6 +77,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core.adapters import cnn_adapter, transformer_adapter
 from repro.core.server import FederatedServer
@@ -99,7 +103,7 @@ def run_paper(args) -> dict:
     srv = FederatedServer(cfg, adapter, train.x, train.y, clients,
                           {"x": test.x[:ntest], "y": test.y[:ntest]})
     t0 = time.time()
-    logs = srv.run(verbose=not args.quiet)
+    logs = srv.run(verbose=not args.quiet, audit_sync=args.audit_sync)
     out = {
         "mode": "paper", "scheme": args.scheme, "nu": args.nu,
         "aggregator": args.aggregator, "dataset": args.dataset,
@@ -136,7 +140,7 @@ def run_transformer(args) -> dict:
     srv = FederatedServer(cfg, adapter, toks, topics, clients,
                           {"x": toks[:test_n], "y": topics[:test_n]})
     t0 = time.time()
-    logs = srv.run(verbose=not args.quiet)
+    logs = srv.run(verbose=not args.quiet, audit_sync=args.audit_sync)
     return {
         "mode": "transformer", "arch": args.arch, "scheme": args.scheme,
         "runtime": args.runtime,
@@ -170,15 +174,18 @@ def run_selection(args) -> dict:
     # 1000s of rounds) can opt out with --no-warm-rerun and take the
     # compile-inclusive rate instead.
     t0 = time.time()
-    final, metrics, _ = R.simulate_rounds(state, cfg, kr, args.rounds)
-    metrics = jax.device_get(metrics)      # ONE host transfer for T rounds
+    with obs.span("selection/cold", rounds=args.rounds,
+                  clients=args.clients):
+        final, metrics, _ = R.simulate_rounds(state, cfg, kr, args.rounds)
+        metrics = obs.device_get(metrics)  # ONE host transfer for T rounds
     cold = time.time() - t0
     if args.no_warm_rerun:
         warm, compile_s = cold, None
     else:
         t1 = time.time()
-        final, m2, _ = R.simulate_rounds(state, cfg, kr, args.rounds)
-        jax.block_until_ready((final, m2))
+        with obs.span("selection/warm", rounds=args.rounds):
+            final, m2, _ = R.simulate_rounds(state, cfg, kr, args.rounds)
+            jax.block_until_ready((final, m2))
         warm = time.time() - t1
         compile_s = max(cold - warm, 0.0)
     out = {
@@ -198,11 +205,22 @@ def run_selection(args) -> dict:
         # (the warm timing re-run is excluded)
         "wall_s": cold,
     }
+    # mirror the fetched metric columns into the obs round series (host
+    # floats already in hand — no extra device traffic)
+    if obs.OBS.enabled:
+        for t in range(args.rounds):
+            obs.OBS.record_round(
+                t, energy_std=out["energy_std"][t],
+                mean_bid=out["mean_bid"][t],
+                server_reward=out["server_reward"][t],
+                client_reward_sum=out["client_reward_sum"][t],
+                num_winners=out["num_winners"][t])
+        obs.flush()
     timing = "incl. compile" if compile_s is None \
         else f"warm; compile={compile_s:.2f}s"
-    print(f"selection-only: N={args.clients} T={args.rounds} "
-          f"{out['rounds_per_s']:.1f} rounds/s ({timing}) "
-          f"final_energy_std={out['energy_std'][-1]:.3f}")
+    obs.log(f"selection-only: N={args.clients} T={args.rounds} "
+            f"{out['rounds_per_s']:.1f} rounds/s ({timing}) "
+            f"final_energy_std={out['energy_std'][-1]:.3f}", always=True)
     return out
 
 
@@ -253,19 +271,37 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quiet", action="store_true")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--log-jsonl", default=None, metavar="PATH",
+                    help="write the structured obs event stream (round "
+                         "series, spans, jax counters) as JSON lines; "
+                         "validate with `python -m repro.obs.schema`")
+    ap.add_argument("--log-csv", default=None, metavar="PATH",
+                    help="flat CSV mirror of the obs event stream")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run "
+                         "for TensorBoard/Perfetto")
+    ap.add_argument("--audit-sync", action="store_true",
+                    help="paper/transformer: wrap warm round dispatches "
+                         "in the transfer-guard sync auditor — any "
+                         "implicit host transfer in the round loop "
+                         "raises at the offending op")
     args = ap.parse_args()
 
-    result = {"paper": run_paper, "transformer": run_transformer,
-              "selection": run_selection}[args.mode](args)
+    obs.configure(jsonl=args.log_jsonl, csv=args.log_csv,
+                  quiet=args.quiet)
+    with obs.maybe_profile(args.profile_dir):
+        result = {"paper": run_paper, "transformer": run_transformer,
+                  "selection": run_selection}[args.mode](args)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)
-        print(f"wrote {args.out}")
+        obs.log(f"wrote {args.out}", always=True)
     if result.get("test_acc"):
-        print(f"final acc={result['test_acc'][-1]:.3f} "
-              f"energy_std={result['energy_std'][-1]:.3f} "
-              f"wall={result['wall_s']:.0f}s")
+        obs.log(f"final acc={result['test_acc'][-1]:.3f} "
+                f"energy_std={result['energy_std'][-1]:.3f} "
+                f"wall={result['wall_s']:.0f}s", always=True)
+    obs.flush()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,142 @@
+"""JAX-awareness layer: centralized retrace/compile counters, device
+transfer accounting, opt-in profiler capture, and the transfer-guard
+sync auditor.
+
+``jax_stats`` generalizes the per-engine ``CohortEngine.stats`` counters
+into one process-wide tally: traced bodies call
+``jax_stats.note_trace(what)`` (a Python side effect, so it fires at
+trace/compile time ONLY — counting adds literally nothing to the warm
+path), shape-cache bookkeeping calls ``note_shape``, and the
+:func:`device_put` / :func:`device_get` wrappers count explicit host
+transfers by direction, bytes and calls.  Tests and benchmarks snapshot
+the counters around a warm window to assert "zero retraces" and "no
+hidden transfers" (tests/test_obs.py, tests/test_fleet.py).
+
+The **sync auditor** (:func:`sync_audit`) wraps a code region in jax's
+transfer guards for both host directions set to ``disallow``: any
+*implicit* host<->device transfer (a numpy array silently fed to a
+jitted program, a ``float()`` on a device scalar) raises, while explicit
+``jax.device_put`` / ``jax.device_get`` — the transfers the async
+pipeline performs on purpose, all routed through the counted wrappers —
+stay legal.  Device-to-device transfers are left unguarded: resharding
+committed arrays onto a mesh is exactly what the sharded paths are
+supposed to do.  CPU caveat: on the CPU backend "device" buffers live in
+host RAM, so the guard audits *API-level* sync discipline (which is what
+retrace/dispatch stalls care about), not physical PCIe traffic — see
+DESIGN.md §Observability.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict
+
+import jax
+
+from repro.obs.registry import OBS
+
+
+class JaxStats:
+    """Process-wide retrace / transfer counters (thread-safe)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: Dict[str, int] = {}
+        self._last_emitted: Dict[str, int] = {}
+
+    def _inc(self, name: str, by: int = 1) -> None:
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + by
+
+    def note_trace(self, what: str = "jit") -> None:
+        """Call from inside a traced body: runs at (re)trace time only."""
+        self._inc("traces")
+        self._inc(f"traces/{what}")
+
+    def note_shape(self, hit: bool) -> None:
+        self._inc("shape_hits" if hit else "shape_misses")
+
+    def note_transfer(self, direction: str, nbytes: int,
+                      calls: int = 1) -> None:
+        """``direction`` is 'h2d' or 'd2h' (explicit, counted wrappers)."""
+        self._inc(f"{direction}_bytes", nbytes)
+        self._inc(f"{direction}_calls", calls)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.counters)
+
+    def delta(self, since: Dict[str, int]) -> Dict[str, int]:
+        """Counter movement since a :meth:`snapshot` (only nonzero keys)."""
+        snap = self.snapshot()
+        keys = set(snap) | set(since)
+        return {k: snap.get(k, 0) - since.get(k, 0) for k in keys
+                if snap.get(k, 0) != since.get(k, 0)}
+
+    def reset(self) -> None:
+        with self._lock:
+            self.counters.clear()
+            self._last_emitted.clear()
+
+
+jax_stats = JaxStats()
+
+
+def _emit_jax_stats() -> None:
+    """Flush hook: one ``jax_stats`` event per flush iff counters moved."""
+    snap = jax_stats.snapshot()
+    if snap and snap != jax_stats._last_emitted:
+        jax_stats._last_emitted = snap
+        OBS.event("jax_stats", **snap)
+
+
+OBS.add_flush_hook(_emit_jax_stats)
+
+
+def _tree_nbytes(tree: Any) -> int:
+    return sum(getattr(x, "nbytes", 0) for x in jax.tree.leaves(tree))
+
+
+def device_put(tree: Any, *args, **kwargs):
+    """Counted explicit host->device transfer (pytree-aware).  Using this
+    instead of feeding numpy straight into a jitted call is what makes
+    the round loop's intended transfers *explicit* — and therefore legal
+    under :func:`sync_audit` — while keeping the byte/count books."""
+    jax_stats.note_transfer("h2d", _tree_nbytes(tree))
+    return jax.device_put(tree, *args, **kwargs)
+
+
+def device_get(tree: Any):
+    """Counted explicit device->host transfer (pytree-aware).  Bytes are
+    tallied from the fetched host buffers, so the count itself never adds
+    a device sync."""
+    out = jax.device_get(tree)
+    jax_stats.note_transfer("d2h", _tree_nbytes(out))
+    return out
+
+
+@contextlib.contextmanager
+def sync_audit(mode: str = "disallow"):
+    """Assert a region performs no *implicit* host transfers (both
+    directions guarded; device-to-device left alone — see module
+    docstring).  Wrap warm round dispatches:
+
+        with obs.sync_audit():
+            server._dispatch_round(t, eval_now)
+
+    Raises jax's XlaRuntimeError at the offending transfer."""
+    with jax.transfer_guard_host_to_device(mode), \
+            jax.transfer_guard_device_to_host(mode):
+        yield
+
+
+@contextlib.contextmanager
+def maybe_profile(profile_dir):
+    """Opt-in ``jax.profiler`` trace capture (``--profile-dir``): a
+    no-op when ``profile_dir`` is falsy, otherwise the whole region is
+    captured for TensorBoard/Perfetto."""
+    if not profile_dir:
+        yield
+        return
+    with jax.profiler.trace(str(profile_dir)):
+        yield

@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 
 
@@ -213,6 +214,14 @@ def _pack_plans(locals_xy: Sequence[Tuple[np.ndarray, np.ndarray]],
         buckets.append(CohortBucket(client_idx=cid, xb=xb, yb=yb,
                                     step_mask=mask, weights=w,
                                     batch_size=bs))
+    if obs.OBS.enabled:
+        # padding efficiency counters (emitted at the next flush): how
+        # many bucket programs ran and how many padded client rows they
+        # carried vs real members
+        obs.OBS.counter("pack/buckets", len(buckets))
+        obs.OBS.counter("pack/client_rows",
+                        sum(b.weights.shape[0] for b in buckets))
+        obs.OBS.counter("pack/real_clients", len(plans))
     return buckets
 
 

@@ -55,6 +55,7 @@ from typing import Any, List, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core.adapters import ModelAdapter
 from repro.optim import apply_updates, fedprox_grad, sgd
@@ -111,11 +112,13 @@ class CohortEngine:
         return 1 if self.mesh is None else self.mesh.shape["data"]
 
     def _note_shape(self, key) -> None:
-        if key in self._seen_shapes:
+        hit = key in self._seen_shapes
+        if hit:
             self.stats["shape_hits"] += 1
         else:
             self._seen_shapes.add(key)
             self.stats["shape_misses"] += 1
+        obs.jax_stats.note_shape(hit)   # process-wide mirror
 
     # ------------------------------------------------------------------
     def _masked_step(self, opt_update, proximal: bool, global_params):
@@ -178,6 +181,7 @@ class CohortEngine:
 
         def core(global_params, xb, yb, mask, weights):
             self.stats["traces"] += 1      # runs at trace time only
+            obs.jax_stats.note_trace("cohort_engine")
 
             def one_client(cx, cy, cm):
                 return self._local_scan(global_params, init, upd, cx, cy,
@@ -250,6 +254,7 @@ class CohortEngine:
         def core(global_params, class_x, class_y, rows, plans, mask,
                  weights):
             self.stats["traces"] += 1      # runs at trace time only
+            obs.jax_stats.note_trace("cohort_engine")
             xg = jnp.take(class_x, rows, axis=0)   # (C, n_cap, *feat)
             yg = jnp.take(class_y, rows, axis=0)
 

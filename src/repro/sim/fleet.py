@@ -45,6 +45,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import FLConfig
 from repro.core.selection import k_per_cluster
 from repro.sim.cohort import HostPlanCache, _next_pow2, _round_up
@@ -146,9 +147,13 @@ class FleetStore:
                 yb[r, :len(yl)] = yl
                 self.class_of[gid] = len(self.classes)
                 self.row_of[gid] = r
+            # the one-time fleet pack IS a real host->device transfer —
+            # route it through the counted explicit wrapper so the obs
+            # byte books include it and the warm loop stays implicit-free
+            xd, yd = obs.device_put((xb, yb))
             self.classes.append(CapacityClass(
                 bs=bs, step_cap=step_cap, tiers=tiers, n_cap=n_cap,
-                members=members, x=jnp.asarray(xb), y=jnp.asarray(yb)))
+                members=members, x=xd, y=yd))
 
     # ------------------------------------------------------------------
     def _empty_batch(self, cls_id: int, tier: int) -> ClassBatch:
