@@ -397,6 +397,74 @@ def bench_round_pipeline(quick: bool):
              speedup=out["speedup"])
 
 
+def bench_fleet_dynamics(quick: bool):
+    """Fleet-dynamics overhead + robustness: warm FL rounds/sec and test
+    accuracy at dropout rates 0 / 0.1 / 0.3 (deadline + buffered
+    aggregation on for the faulty fleets).  The rate-0 row runs the
+    dynamics-free bit-exact path, so the delta to rate>0 rows is the
+    full price of the fault model (fused fault step + outcome fetch +
+    replacement sampling + buffer folds)."""
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.core.server import FederatedServer
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+
+    nclients = 24 if quick else 64
+    warm_rounds, timed_rounds = (2, 4) if quick else (3, 8)
+    base = FLConfig(num_clients=nclients, num_clusters=4,
+                    select_ratio=10 / nclients if quick else 0.25,
+                    local_epochs=2, scheme="gradient_cluster_auction",
+                    sample_window=20, cluster_resamples=2,
+                    init_energy_mode="normal", eval_every=10 ** 6,
+                    runtime="device", seed=0)
+    train, test = make_image_dataset("mnist", n_train=nclients * 130,
+                                     n_test=256, seed=0)
+    adapter = cnn_adapter("mnist")
+    out = {"clients": nclients, "warm_rounds": warm_rounds,
+           "timed_rounds": timed_rounds, "rates": {}}
+    for rate in (0.0, 0.1, 0.3):
+        cfg = base.replace(
+            churn=rate, deadline=1.5 if rate > 0 else 0.0,
+            aggregation="buffered" if rate > 0 else "sync")
+        clients = partition_clients(train.y, cfg, seed=0)
+        srv = FederatedServer(cfg, adapter, train.x, train.y, clients,
+                              {"x": test.x[:256], "y": test.y[:256]})
+        srv.run(rounds=warm_rounds)
+        jax.block_until_ready(srv.params)
+        t0 = time.time()
+        for t in range(warm_rounds, warm_rounds + timed_rounds):
+            srv._dispatch_round(t, eval_now=False)
+        srv._flush_pending()
+        jax.block_until_ready(srv.params)
+        wall = time.time() - t0
+        acc, _ = jax.device_get(srv._eval_step(srv.params, srv._test_dev))
+        codes = (np.concatenate(srv.outcome_log) if srv.dynamics
+                 else np.zeros((0,), np.int32))
+        row = {
+            "rounds_per_s": timed_rounds / wall,
+            "test_acc": float(acc),
+            "num_late": int((codes == 2).sum()),
+            "num_dropped": int((codes == 3).sum()),
+        }
+        out["rates"][str(rate)] = row
+        _row(f"fleet_dynamics_p{rate}", wall / timed_rounds * 1e6,
+             f"rounds_per_s={row['rounds_per_s']:.2f} "
+             f"acc={row['test_acc']:.3f} late={row['num_late']} "
+             f"dropped={row['num_dropped']}")
+    base_rps = out["rates"]["0.0"]["rounds_per_s"]
+    out["overhead_p0.3"] = base_rps / out["rates"]["0.3"]["rounds_per_s"]
+    _save("fleet_dynamics", out)
+    _summary("fleet_dynamics", clients=nclients,
+             rounds_per_s_p0=base_rps,
+             rounds_per_s_p01=out["rates"]["0.1"]["rounds_per_s"],
+             rounds_per_s_p03=out["rates"]["0.3"]["rounds_per_s"],
+             acc_p0=out["rates"]["0.0"]["test_acc"],
+             acc_p01=out["rates"]["0.1"]["test_acc"],
+             acc_p03=out["rates"]["0.3"]["test_acc"],
+             overhead_p03=out["overhead_p0.3"])
+
+
 # ----------------------------------------------------------------------
 # paper figures (FL simulations)
 # ----------------------------------------------------------------------
@@ -522,6 +590,7 @@ BENCHES = {
     "cohort_engine": bench_cohort_engine,
     "cohort_sharded": bench_cohort_sharded,
     "round_pipeline": bench_round_pipeline,
+    "fleet_dynamics": bench_fleet_dynamics,
     "fig3": bench_virtual_dataset,
     "fig4": bench_fig4,
     "fig5": bench_fig5,

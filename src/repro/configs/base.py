@@ -228,6 +228,42 @@ class FLConfig:
     aggregator: str = "fedavg"        # fedavg | fedprox
     fedprox_mu: float = 0.01
 
+    # fleet dynamics (repro.sim.dynamics) — all off by default so the
+    # round-synchronous paper repro stays bit-identical; any churn or a
+    # positive deadline turns the fault model on (dynamics_enabled).
+    churn: float = 0.0          # per-round dropout prob (availability +
+    #                             mid-round); 0 disables the churn process
+    rejoin_prob: float = 0.5    # per-round arrival prob of an unavailable
+    #                             client (the churn process's return edge)
+    deadline: float = 0.0       # FedCS-style round deadline in units of
+    #                             the fleet-mean compute+network latency;
+    #                             0 = no deadline (nobody is ever late)
+    straggler_profile: str = "energy"   # energy | uniform | lognormal |
+    #   none — how per-client latency scale is sampled. 'energy' ties the
+    #   slowdown to the residual-energy heterogeneity profile (low-energy
+    #   clients are up to ~3x slower), the paper-consistent default.
+    aggregation: str = "sync"   # sync | buffered. 'sync' re-weights the
+    #   FedAvg over deadline survivors each round; 'buffered' additionally
+    #   lands late updates in a device-resident buffer folded FedBuff-
+    #   style (staleness-weighted) at goal-count or timeout boundaries.
+    buffer_goal: int = 4        # fold the late buffer when this many
+    #                             updates have arrived...
+    buffer_timeout: int = 4     # ...or when the oldest arrived entry has
+    #                             waited this many rounds, whichever first
+    staleness_alpha: float = 0.5   # staleness discount exponent: a late
+    #   update folded tau rounds after dispatch is scaled by
+    #   (1 + tau) ** -alpha (FedBuff's 1/sqrt(1+tau) at the default)
+    replace_dropped: bool = True   # retry-or-replace: resample a dropped
+    #   winner's slot from its cluster's available non-winners
+
+    @property
+    def dynamics_enabled(self) -> bool:
+        """True when the client-dynamics fault model is active.  The
+        guard the churn-0 bit-identity regression rests on: with no
+        churn and no deadline every dynamics code path is skipped and
+        the round programs are the exact pre-dynamics traces."""
+        return self.churn > 0.0 or self.deadline > 0.0
+
     # data heterogeneity (paper §V-A)
     non_iid_level: float = 1.0        # nu: fraction of a client's data w/ one label
     imbalance_low: float = 1.0 / 6.0  # local size in [varpi/6, 2*varpi]

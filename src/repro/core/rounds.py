@@ -30,6 +30,7 @@ per-round keys.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -61,14 +62,18 @@ def round_rewards(win: jnp.ndarray, bids: jnp.ndarray,
 def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
                 count_hists: Optional[jnp.ndarray],
                 global_hist: Optional[jnp.ndarray],
-                winners_impl: str = "segmented"
+                winners_impl: str = "segmented",
+                avail: Optional[jnp.ndarray] = None
                 ) -> Tuple[SEL.SelectionState, jnp.ndarray, Metrics]:
     """One full control-plane round. Pure function of (state, key) —
     traced identically by the jitted step, the scan path and the eager
     reference (modulo ``winners_impl``, whose implementations are
-    bit-identical), which is what makes the three bit-comparable."""
+    bit-identical), which is what makes the three bit-comparable.
+    ``avail`` is the fleet-dynamics availability mask (None = every
+    dynamics-free trace is unchanged)."""
     obs.jax_stats.note_trace("round_step")   # fires at (re)trace time only
-    win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl)
+    win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl,
+                                 avail=avail)
     bids = info["bids"]
     client_r, server_r = round_rewards(win, bids, state.local_sizes, cfg)
     new_state = SEL.update_after_round(state, win, cfg)
@@ -96,18 +101,69 @@ def _round_step_jit(state: SEL.SelectionState, key, count_hists, global_hist,
                        winners_impl)
 
 
+def _round_body_dyn(state: SEL.SelectionState, dyn_state, key, dyn_key,
+                    cfg: FLConfig, count_hists, global_hist,
+                    winners_impl: str):
+    """The dynamics-composed round: selection sees the churn process's
+    round-start availability, then the fault model classifies every
+    winner (completed/late/dropped) and the staleness counter ages.  The
+    control plane's energy/history update stays winner-based (a dropped
+    client still burned its round budget committing — the upper-bound
+    accounting DESIGN.md §Fleet dynamics motivates)."""
+    from repro.sim import dynamics as DYN
+    new_state, win, metrics = _round_body(
+        state, key, cfg, count_hists, global_hist, winners_impl,
+        avail=dyn_state.avail)
+    k_fault = jax.random.fold_in(dyn_key, 0)
+    outcome, lat, new_avail = DYN.fault_step(
+        cfg, k_fault, win, dyn_state.avail, state.residual,
+        state.local_sizes)
+    stale = DYN.update_staleness(state.staleness, outcome)
+    new_state = dataclasses.replace(new_state, staleness=stale)
+    metrics = dict(metrics)
+    metrics.update(DYN.outcome_metrics(outcome, stale))
+    nwin = jnp.maximum(metrics["num_winners"], 1)
+    metrics["mean_latency"] = jnp.where(win, lat, 0.0).sum() / nwin
+    metrics["num_avail"] = new_avail.sum()
+    return (new_state, DYN.DynamicsState(avail=new_avail), win, outcome,
+            metrics)
+
+
+@partial(jax.jit, static_argnames=("cfg", "winners_impl"))
+def _round_step_dyn_jit(state: SEL.SelectionState, dyn_state, key, dyn_key,
+                        count_hists, global_hist, cfg: FLConfig,
+                        winners_impl: str):
+    return _round_body_dyn(state, dyn_state, key, dyn_key, cfg,
+                           count_hists, global_hist, winners_impl)
+
+
 def make_round_step(cfg: FLConfig,
                     count_hists: Optional[np.ndarray] = None,
                     global_hist: Optional[np.ndarray] = None,
-                    winners_impl: str = "segmented"):
+                    winners_impl: str = "segmented",
+                    dynamics: bool = False):
     """Compile one ``(state, key) -> (new_state, win, metrics)`` round
     program for the live FL loop. ``count_hists`` is the (N, num_classes)
     per-client label-count matrix (virtual_dataset.client_count_histograms);
-    with it the vds-gap is computed on device, otherwise it logs 0."""
+    with it the vds-gap is computed on device, otherwise it logs 0.
+
+    With ``dynamics=True`` the returned step fuses the fleet fault model
+    (repro.sim.dynamics) into the same program and has the extended
+    signature ``(state, dyn_state, key, dyn_key) -> (new_state,
+    new_dyn_state, win, outcome, metrics)`` — ``dyn_key`` comes from the
+    server's DEDICATED dynamics chain, never the selection chain."""
     ch = None if count_hists is None else jnp.asarray(count_hists,
                                                       jnp.float32)
     gh = None if global_hist is None else jnp.asarray(global_hist,
                                                       jnp.float32)
+
+    if dynamics:
+        def round_step_dyn(state: SEL.SelectionState, dyn_state, key,
+                           dyn_key):
+            return _round_step_dyn_jit(state, dyn_state, key, dyn_key,
+                                       ch, gh, cfg, winners_impl)
+
+        return round_step_dyn
 
     def round_step(state: SEL.SelectionState, key):
         return _round_step_jit(state, key, ch, gh, cfg, winners_impl)

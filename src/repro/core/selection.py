@@ -12,7 +12,7 @@ schemes compared in the paper:
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,11 +36,17 @@ class SelectionState:
     residual: jnp.ndarray        # (N,) float32 energy percent
     history: jnp.ndarray         # (N,) int32 participation rounds so far
     local_sizes: jnp.ndarray     # (N,) int32 |xi_k|
+    # (N,) int32 rounds since the client last completed a round, or None
+    # when fleet dynamics are off (None is an empty pytree node, so the
+    # dynamics-free round programs trace exactly as before — the churn-0
+    # bit-identity regression depends on this)
+    staleness: Optional[jnp.ndarray] = None
 
 
 jax.tree_util.register_dataclass(
     SelectionState,
-    data_fields=["clusters", "residual", "history", "local_sizes"],
+    data_fields=["clusters", "residual", "history", "local_sizes",
+                 "staleness"],
     meta_fields=[])
 
 
@@ -113,14 +119,22 @@ def _random_per_cluster_loop(key, state: SelectionState, cfg: FLConfig,
 
 
 def select_round(state: SelectionState, cfg: FLConfig, key,
-                 winners_impl: str = "segmented"
+                 winners_impl: str = "segmented",
+                 avail: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Run one round of selection. Returns (winner mask (N,) bool, info).
     ``winners_impl`` picks the per-cluster auction implementation
     (auction.cluster_winners): ``segmented`` fused top-k (default) or
     ``loop``, the seed per-cluster argsort oracle — bit-identical winner
     sets, kept selectable for regression tests and as the benchmark
-    baseline."""
+    baseline.
+
+    ``avail`` (fleet dynamics): round-start availability mask — an
+    offline client cannot bid, so it joins the clustered schemes'
+    eligibility conjunction; the pure ``random`` baseline keeps drawing
+    blind (its picks model a server with no liveness signal — offline
+    picks become DROPPED outcomes downstream).  ``None`` (the default)
+    leaves every traced graph untouched."""
     n = cfg.num_clients
     k_total = max(int(round(cfg.select_ratio * n)), 1)
     keys = jax.random.split(key, 4)
@@ -135,6 +149,8 @@ def select_round(state: SelectionState, cfg: FLConfig, key,
     if cfg.scheme in ("gradient_cluster_random", "weights_cluster_random"):
         smin = _sample_threshold(keys[0], state, cfg, None)
         eligible = state.local_sizes >= smin
+        if avail is not None:
+            eligible = eligible & avail
         win = _random_per_cluster(keys[1], state, cfg, eligible)
         info["bids"] = jnp.zeros((n,))
         info["s_min"] = smin
@@ -149,6 +165,8 @@ def select_round(state: SelectionState, cfg: FLConfig, key,
     # step 1: probe cluster js fixes the sample threshold
     smin = _sample_threshold(keys[0], state, cfg, bids)
     eligible = (state.local_sizes >= smin) & (c < A.INF)
+    if avail is not None:
+        eligible = eligible & avail
     # step 2: per-cluster reverse auction among eligible clients
     cs = A.service_cost(state.local_sizes, state.history, cfg)
     win = A.cluster_winners(bids, state.clusters, eligible, kj,

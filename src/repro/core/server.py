@@ -27,6 +27,22 @@ still in flight.  One batched ``device_get`` drains the buffer at
 logging boundaries (verbose prints, ``run_round`` returns, end of run) —
 the only unconditional per-round host transfer left is the winner mask,
 which stage-3's host-seeded shuffle rng genuinely needs.
+
+With fleet dynamics on (``cfg.dynamics_enabled`` — any churn or a
+positive deadline) the fused round step additionally runs the
+repro.sim.dynamics fault model, and the aggregation path degrades
+gracefully instead of assuming a full cohort: only COMPLETED winners
+(plus retry-or-replace substitutes for DROPPED ones) aggregate
+synchronously — FedAvg re-weights over the survivors automatically
+because the cohort runtimes normalize within whatever index set they
+are handed; a zero-survivor round leaves the params untouched and logs
+a ``round/empty`` dynamics event (never a 0/0).  Under ``--aggregation
+buffered`` LATE winners still train, but their update lands in a
+device-resident buffer as a staleness-stamped delta and folds into the
+global model FedBuff-style at goal-count or timeout boundaries
+(``round/buffer_fold`` spans).  With dynamics off both aggregation
+modes take the exact pre-dynamics code path — the synchronous oracle —
+so churn-0 runs stay bit-identical (tests/test_dynamics.py).
 """
 from __future__ import annotations
 
@@ -45,6 +61,7 @@ from repro.core import rounds as RND
 from repro.core import selection as SEL
 from repro.core.adapters import ModelAdapter
 from repro.optim import apply_updates, sgd
+from repro.sim import dynamics as DYN
 from repro.sim.runtime import make_runtime
 
 
@@ -65,12 +82,36 @@ class RoundLog:
 class _PendingRound:
     """A dispatched round whose host fetches haven't happened yet:
     ``metrics`` is the round step's on-device scalar dict, ``eval_pair``
-    the fused (accuracy, loss) device scalars or None off-cadence."""
+    the fused (accuracy, loss) device scalars or None off-cadence,
+    ``dyn`` the host-side dynamics scalars (replacements, buffer depth)
+    or None with dynamics off."""
 
     round: int
     selected: np.ndarray
     metrics: Any
     eval_pair: Optional[Any]
+    dyn: Optional[Dict[str, float]] = None
+
+
+@dataclass
+class _BufferedUpdate:
+    """One late update parked in the device-resident FedBuff buffer:
+    ``delta`` is the late sub-cohort's aggregated param delta (vs the
+    globals it trained from) as a device tree, ``mass`` its data mass
+    (sum of local sizes — the FedAvg numerator it would have carried),
+    ``round`` the dispatch round and ``arrival`` the first round the
+    server can fold it (dispatch + 1: late means after the deadline)."""
+
+    delta: Any
+    mass: float
+    round: int
+    arrival: int
+
+# device metric keys the dynamics round step adds; drained with the same
+# batched fetch as the base metrics and mirrored into the round series
+_DYN_METRIC_KEYS = ("num_completed", "num_late", "num_dropped",
+                    "staleness_mean", "staleness_max", "mean_latency",
+                    "num_avail")
 
 
 class FederatedServer:
@@ -90,11 +131,16 @@ class FederatedServer:
         self.runtime = make_runtime(cfg, adapter, x, y, clients)
 
         sizes = jnp.asarray([c.size for c in clients], jnp.int32)
+        self.dynamics = cfg.dynamics_enabled
         self.state = SEL.SelectionState(
             clusters=jnp.zeros((cfg.num_clients,), jnp.int32),
             residual=EN.init_energy(cfg, self._next_key()),
             history=jnp.zeros((cfg.num_clients,), jnp.int32),
             local_sizes=sizes,
+            # None with dynamics off: the field must not exist as an
+            # array leaf or the dynamics-free round traces would change
+            staleness=(jnp.zeros((cfg.num_clients,), jnp.int32)
+                       if self.dynamics else None),
         )
         from repro.core.virtual_dataset import client_count_histograms
         from repro.data.partition import global_histogram
@@ -108,7 +154,29 @@ class FederatedServer:
         self._round_step = RND.make_round_step(
             cfg, client_count_histograms(self.client_labels,
                                          cfg.num_classes),
-            self.global_hist)
+            self.global_hist, dynamics=self.dynamics)
+        if self.dynamics:
+            # the DEDICATED dynamics chain: split off its own root so
+            # churn-0 runs consume the selection chain identically
+            self._dyn_key = DYN.dynamics_key(cfg)
+            self.dyn_state = DYN.init_dynamics(cfg)
+            # host mirrors the replacement sampler reads: round-start
+            # availability and (after stage 1) cluster ids
+            self._host_avail = np.ones((cfg.num_clients,), bool)
+            self._host_clusters = np.zeros((cfg.num_clients,), np.int64)
+            self._host_sizes = np.asarray([c.size for c in clients],
+                                          np.int64)
+            # replacement draws come from their own host rng chain, so
+            # they are a pure function of (seed, outcome stream) and
+            # identical across cohort runtimes
+            self._dyn_rng = np.random.default_rng(
+                np.uint32(cfg.seed) + 0x5D7A)
+            self.outcome_log: List[np.ndarray] = []   # per-round winner codes
+            self._late_buffer: List[_BufferedUpdate] = []
+            self._delta_step = jax.jit(
+                lambda new, old: jax.tree.map(jnp.subtract, new, old))
+            self._fold_one = jax.jit(
+                lambda p, d, c: jax.tree.map(lambda a, b: a + c * b, p, d))
         # host mirror of participation counts: stage-3 shuffle seeding
         # reads history per winner, which on the device array cost one
         # int(history[i]) sync per client per round.
@@ -131,6 +199,10 @@ class FederatedServer:
     # ------------------------------------------------------------------
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
+        return k
+
+    def _next_dyn_key(self):
+        self._dyn_key, k = jax.random.split(self._dyn_key)
         return k
 
     # ------------------------------------------------------------------
@@ -174,7 +246,11 @@ class FederatedServer:
             assign_fn=self.assign_fn, precomputed_feats=feats)
         self.state = SEL.SelectionState(
             clusters=labels.astype(jnp.int32), residual=self.state.residual,
-            history=self.state.history, local_sizes=self.state.local_sizes)
+            history=self.state.history, local_sizes=self.state.local_sizes,
+            staleness=self.state.staleness)
+        if self.dynamics:
+            self._host_clusters = np.asarray(obs.device_get(labels),
+                                             np.int64)
 
     # ------------------------------------------------------------------
     def local_train(self, client_idx: int, global_params):
@@ -186,14 +262,19 @@ class FederatedServer:
         return final or self.cfg.eval_every <= 1 \
             or t % self.cfg.eval_every == 0
 
-    def _dispatch_round(self, t: int, eval_now: bool) -> None:
+    def _dispatch_round(self, t: int, eval_now: bool,
+                        final: bool = False) -> None:
         """Dispatch one FL round without fetching its results.  The whole
         stage-2 control plane (selection, rewards, energy/history update,
         round metrics) is one jitted call (repro.core.rounds
         .make_round_step); only the winner mask is fetched — stage-3's
         host-seeded shuffle rng needs it — while the metric scalars (and
         the fused eval pair, when due) stay on device in the pending
-        buffer until the next logging boundary."""
+        buffer until the next logging boundary.  With fleet dynamics on
+        the fused step also runs the fault model and dispatch degrades
+        gracefully over the outcome mask (:meth:`_dispatch_round_dyn`)."""
+        if self.dynamics:
+            return self._dispatch_round_dyn(t, eval_now, final)
         with obs.span("round/dispatch", round=t):
             with obs.span("round/select", round=t):
                 new_state, win, metrics = self._round_step(self.state,
@@ -211,6 +292,11 @@ class FederatedServer:
                     self.params, sel_idx, self._host_history)
             if new_params is not None:
                 self.params = new_params
+            else:
+                # zero-winner (or all-zero-size) round: the runtimes
+                # return None instead of a 0/0 aggregate — params pass
+                # through unchanged and the event is visible in the log
+                self._log_empty_round(t)
 
             self.state = new_state
             self._host_history[sel_idx] += 1
@@ -221,6 +307,145 @@ class FederatedServer:
                 ev = None
             self._pending.append(_PendingRound(
                 round=t, selected=sel_idx, metrics=metrics, eval_pair=ev))
+
+    # -- fleet dynamics ------------------------------------------------
+    def _log_empty_round(self, t: int) -> None:
+        """A round whose synchronous aggregate had no survivors: params
+        pass through unchanged (never a division by a zero weight sum)
+        and the event lands in the log for the schema validator."""
+        obs.OBS.counter("round/empty")
+        obs.OBS.event("dynamics", name="round/empty", round=t)
+
+    def _resample_dropped(self, dropped: np.ndarray,
+                          win_np: np.ndarray) -> np.ndarray:
+        """Retry-or-replace: each DROPPED winner's slot is refilled by a
+        uniform draw among its cluster's currently-available non-winners
+        with local data (an empty candidate pool forfeits the slot).
+        Draws come from the dedicated host dynamics rng, so replacement
+        picks are a pure function of (seed, outcome stream) — identical
+        across cohort runtimes."""
+        chosen: List[int] = []
+        taken = win_np.copy()
+        for gid in dropped:
+            cand = np.nonzero(
+                (self._host_clusters == self._host_clusters[int(gid)])
+                & self._host_avail & ~taken & (self._host_sizes > 0))[0]
+            if cand.size == 0:
+                continue
+            pick = int(cand[self._dyn_rng.integers(cand.size)])
+            taken[pick] = True
+            chosen.append(pick)
+        return np.asarray(chosen, np.int64)
+
+    def _maybe_fold_buffer(self, t: int, force: bool = False) -> int:
+        """Fold the arrived late updates into the global model when the
+        FedBuff boundary hits: goal-count reached, the oldest arrived
+        entry timed out, or ``force`` (the final round folds whatever has
+        arrived; updates still in flight when the run ends are lost —
+        they never reached the server).  Each entry's delta is scaled by
+        its staleness discount times its share of the folded data mass,
+        so the fold is a staleness-weighted FedAvg over the buffer."""
+        arrived = [e for e in self._late_buffer if e.arrival <= t]
+        if not arrived:
+            return 0
+        oldest = min(e.round for e in arrived)
+        if not (force or len(arrived) >= self.cfg.buffer_goal
+                or t - oldest >= self.cfg.buffer_timeout):
+            return 0
+        with obs.span("round/buffer_fold", round=t, entries=len(arrived)):
+            total = sum(e.mass for e in arrived)
+            p = self.params
+            for e in arrived:
+                c = (DYN.staleness_weight(self.cfg, t - e.round)
+                     * e.mass / total)
+                p = self._fold_one(p, e.delta, c)
+            self.params = p
+        self._late_buffer = [e for e in self._late_buffer
+                             if e.arrival > t]
+        obs.OBS.counter("dyn/buffer_folds")
+        obs.OBS.event("dynamics", name="buffer/fold", round=t,
+                      entries=len(arrived), oldest=oldest)
+        return len(arrived)
+
+    def _dispatch_round_dyn(self, t: int, eval_now: bool,
+                            final: bool = False) -> None:
+        """The dynamics-aware dispatch: one fused (selection + fault
+        model) step, then aggregation over the outcome mask — COMPLETED
+        winners plus retry-or-replace substitutes aggregate now (FedAvg
+        re-weights over them automatically), LATE winners feed the
+        buffered path, DROPPED ones only burned energy.  The extra host
+        traffic vs the dynamics-free loop is one batched fetch of the
+        outcome codes + next availability mask alongside the winner
+        mask."""
+        cfg = self.cfg
+        with obs.span("round/dispatch", round=t):
+            with obs.span("round/select", round=t):
+                (new_state, new_dyn, win, outcome,
+                 metrics) = self._round_step(self.state, self.dyn_state,
+                                             self._next_key(),
+                                             self._next_dyn_key())
+                win_np, out_np, next_avail = obs.device_get(
+                    (win, outcome, new_dyn.avail))
+                sel_idx = np.nonzero(win_np)[0]
+            completed, late, dropped = DYN.split_outcomes(sel_idx, out_np)
+            self.outcome_log.append(out_np[sel_idx])
+            repl = (self._resample_dropped(dropped, win_np)
+                    if cfg.replace_dropped and dropped.size
+                    else np.empty((0,), np.int64))
+            train_idx = np.concatenate(
+                [completed.astype(np.int64), repl])
+            dyn_row: Dict[str, float] = {"num_replaced": int(repl.size)}
+            if dropped.size:
+                obs.OBS.counter("dyn/dropped", int(dropped.size))
+            if late.size:
+                obs.OBS.counter("dyn/deadline_miss", int(late.size))
+            if repl.size:
+                obs.OBS.counter("dyn/replaced", int(repl.size))
+
+            params0 = self.params
+            buffered = cfg.aggregation == "buffered"
+            if buffered and late.size:
+                # the late sub-cohort trains from the same globals it was
+                # dispatched with; its aggregate becomes a buffered delta
+                with obs.span("round/train_late", round=t,
+                              cohort=int(late.size)):
+                    late_agg = self.runtime.train_cohort(
+                        params0, late, self._host_history)
+                if late_agg is not None:
+                    self._late_buffer.append(_BufferedUpdate(
+                        delta=self._delta_step(late_agg, params0),
+                        mass=float(self._host_sizes[late].sum()),
+                        round=t, arrival=t + 1))
+            with obs.span("round/train", round=t,
+                          cohort=int(train_idx.size)):
+                new_params = self.runtime.train_cohort(
+                    params0, train_idx, self._host_history)
+            if new_params is not None:
+                self.params = new_params
+            else:
+                self._log_empty_round(t)
+
+            self.state = new_state
+            self.dyn_state = new_dyn
+            self._host_avail = np.asarray(next_avail, bool)
+            # the shuffle-seed mirror advances for every client whose
+            # local pass actually ran this round (survivors, substitutes
+            # and — under buffering — the late trainers); the device-side
+            # history keeps the control plane's commitment accounting
+            trained = (np.concatenate([train_idx, late.astype(np.int64)])
+                       if buffered else train_idx)
+            self._host_history[trained] += 1
+            folded = self._maybe_fold_buffer(t, force=final)
+            dyn_row["buffer_len"] = len(self._late_buffer)
+            dyn_row["buffer_folded"] = folded
+            if eval_now:
+                with obs.span("round/eval", round=t):
+                    ev = self._eval_step(self.params, self._test_dev)
+            else:
+                ev = None
+            self._pending.append(_PendingRound(
+                round=t, selected=sel_idx, metrics=metrics, eval_pair=ev,
+                dyn=dyn_row))
 
     def _flush_pending(self) -> None:
         """Drain the pending buffer with ONE batched device_get and turn
@@ -247,6 +472,12 @@ class FederatedServer:
                 vds_gap=float(m["vds_gap"])))
             # per-round series row: every scalar is already a host float
             # from the batched fetch above — recording adds no sync
+            extra: Dict[str, float] = {}
+            for k in _DYN_METRIC_KEYS:
+                if k in m:
+                    extra[k] = float(m[k])
+            if p.dyn is not None:
+                extra.update({k: float(v) for k, v in p.dyn.items()})
             obs.OBS.record_round(
                 p.round, test_acc=acc, test_loss=loss,
                 energy_std=float(m["energy_std"]),
@@ -254,7 +485,7 @@ class FederatedServer:
                 server_reward=float(m["server_reward"]),
                 client_reward_sum=float(m["client_reward_sum"]),
                 vds_gap=float(m["vds_gap"]),
-                num_selected=int(p.selected.size))
+                num_selected=int(p.selected.size), **extra)
         self._pending.clear()
         obs.flush()        # the logging boundary: sinks see I/O only here
 
@@ -286,13 +517,14 @@ class FederatedServer:
         T = rounds if rounds is not None else self.cfg.rounds
         for t in range(T):
             printing = verbose and (t % 5 == 0 or t == T - 1)
+            final = t == T - 1
             if audit_sync and t >= audit_warm_rounds:
                 with obs.sync_audit():
-                    self._dispatch_round(t, self._eval_due(t,
-                                                           final=t == T - 1))
+                    self._dispatch_round(t, self._eval_due(t, final=final),
+                                         final=final)
             else:
-                self._dispatch_round(t, self._eval_due(t,
-                                                       final=t == T - 1))
+                self._dispatch_round(t, self._eval_due(t, final=final),
+                                     final=final)
             if printing:
                 self._flush_pending()
                 log = self.logs[-1]

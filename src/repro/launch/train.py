@@ -93,7 +93,11 @@ def run_paper(args) -> dict:
         non_iid_level=args.nu, scheme=args.scheme,
         aggregator=args.aggregator, init_energy_mode=args.energy_mode,
         runtime=args.runtime, cohort_mesh_devices=args.cohort_devices,
-        eval_every=args.eval_every, seed=args.seed)
+        eval_every=args.eval_every, seed=args.seed,
+        churn=args.churn, deadline=args.deadline,
+        straggler_profile=args.straggler_profile,
+        aggregation=args.aggregation, buffer_goal=args.buffer_goal,
+        buffer_timeout=args.buffer_timeout)
     train, test = make_image_dataset(args.dataset,
                                      n_train=args.pool, n_test=args.pool // 6,
                                      seed=args.seed)
@@ -118,6 +122,17 @@ def run_paper(args) -> dict:
         "vds_gap": [l.vds_gap for l in logs],
         "wall_s": time.time() - t0,
     }
+    if srv.dynamics:
+        from repro.sim import dynamics as DYN
+        codes = (np.concatenate(srv.outcome_log) if srv.outcome_log
+                 else np.zeros((0,), np.int32))
+        out["dynamics"] = {
+            "churn": cfg.churn, "deadline": cfg.deadline,
+            "aggregation": cfg.aggregation,
+            "num_completed": int((codes == DYN.COMPLETED).sum()),
+            "num_late": int((codes == DYN.LATE).sum()),
+            "num_dropped": int((codes == DYN.DROPPED).sum()),
+        }
     return out
 
 
@@ -130,7 +145,11 @@ def run_transformer(args) -> dict:
         non_iid_level=args.nu, scheme=args.scheme, num_classes=10,
         sample_window=8, cluster_resamples=2, runtime=args.runtime,
         cohort_mesh_devices=args.cohort_devices,
-        eval_every=args.eval_every, seed=args.seed)
+        eval_every=args.eval_every, seed=args.seed,
+        churn=args.churn, deadline=args.deadline,
+        straggler_profile=args.straggler_profile,
+        aggregation=args.aggregation, buffer_goal=args.buffer_goal,
+        buffer_timeout=args.buffer_timeout)
     toks, topics = make_token_dataset(
         num_topics=10, vocab=mcfg.vocab_size, seq_len=32,
         n=cfg.num_clients * 40, seed=args.seed)
@@ -263,6 +282,36 @@ def main():
     ap.add_argument("--pool", type=int, default=12000)
     ap.add_argument("--energy-mode", default="normal",
                     choices=["full", "normal"])
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="fleet dynamics: per-round dropout probability "
+                         "of the availability churn process (0 disables "
+                         "— runs stay bit-identical to the dynamics-free "
+                         "path under the same seed)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="fleet dynamics: FedCS-style round deadline in "
+                         "units of the fleet-mean round time; a winner "
+                         "whose sampled latency exceeds it is LATE "
+                         "(0 disables deadline misses)")
+    ap.add_argument("--straggler-profile", default="energy",
+                    choices=["energy", "uniform", "lognormal", "none"],
+                    help="latency heterogeneity for the straggler model: "
+                         "'energy' ties slowdown to residual battery "
+                         "(the paper's heterogeneity profile), "
+                         "'uniform'/'lognormal' are energy-independent, "
+                         "'none' is deterministic")
+    ap.add_argument("--aggregation", default="sync",
+                    choices=["sync", "buffered"],
+                    help="'sync' re-weights FedAvg over the surviving "
+                         "cohort; 'buffered' additionally folds LATE "
+                         "winners' updates in FedBuff-style with "
+                         "staleness-discounted weights at goal-count or "
+                         "timeout boundaries")
+    ap.add_argument("--buffer-goal", type=int, default=4,
+                    help="buffered aggregation: fold once this many late "
+                         "updates have arrived")
+    ap.add_argument("--buffer-timeout", type=int, default=4,
+                    help="buffered aggregation: fold once the oldest "
+                         "arrived update is this many rounds stale")
     ap.add_argument("--no-warm-rerun", action="store_true",
                     help="selection mode: skip the second (warm) timing "
                          "run — rounds_per_s then includes compile time "

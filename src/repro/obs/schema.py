@@ -27,7 +27,8 @@ import json
 import sys
 from typing import Any, Dict, List, Optional
 
-KINDS = ("meta", "round", "span", "counter", "gauge", "jax_stats", "log")
+KINDS = ("meta", "round", "span", "counter", "gauge", "jax_stats", "log",
+         "dynamics")
 
 REQUIRED: Dict[str, tuple] = {
     "round": ("round", "test_acc", "test_loss", "energy_std", "mean_bid",
@@ -36,6 +37,9 @@ REQUIRED: Dict[str, tuple] = {
     "counter": ("name", "value"),
     "gauge": ("name", "value"),
     "log": ("msg",),
+    # fleet-dynamics events (round/empty, buffer/fold) — see
+    # repro.core.server and DESIGN.md §Fleet dynamics
+    "dynamics": ("name",),
 }
 
 _EPS = 5e-3   # span clock tolerance (perf_counter rounding at 1e-6 + loop)

@@ -14,9 +14,14 @@ cohorts (see DESIGN.md §Cohort-engine / §Round pipeline and ROADMAP.md
   * runtime.py — the ``CohortRuntime`` protocol and the four backends
     (``sequential`` reference oracle, ``vectorized`` engine, ``sharded``
     mesh-mapped engine, ``device`` resident-fleet pipeline).
+  * dynamics.py — the jittable per-round fault model (availability
+    churn, stragglers, FedCS-style deadline misses) the fused round
+    control plane composes in when ``cfg.dynamics_enabled``.
 """
 from repro.sim.cohort import (CohortBucket, HostPlanCache, pack_cohort,
                               pack_feature_pass)
+from repro.sim.dynamics import (DynamicsState, dynamics_key, fault_step,
+                                init_dynamics, split_outcomes)
 from repro.sim.engine import CohortEngine
 from repro.sim.fleet import CapacityClass, ClassBatch, FleetStore
 from repro.sim.runtime import (CohortRuntime, DeviceRuntime,
@@ -29,4 +34,6 @@ __all__ = [
     "CapacityClass", "ClassBatch", "FleetStore",
     "CohortRuntime", "DeviceRuntime", "SequentialRuntime",
     "ShardedRuntime", "VectorizedRuntime", "make_runtime",
+    "DynamicsState", "dynamics_key", "fault_step", "init_dynamics",
+    "split_outcomes",
 ]

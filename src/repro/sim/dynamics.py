@@ -1,0 +1,212 @@
+"""Client dynamics: availability churn, stragglers and deadline misses.
+
+The paper's auction assumes every winner trains to completion instantly,
+but its whole premise is energy/compute heterogeneity in a mobile edge
+fleet — real clients drop out, miss deadlines, and return stale updates
+(FedCS, Nishio & Yonetani, arXiv:1804.08333).  This module is the
+jittable per-round fault model the fused round control plane
+(repro.core.rounds) composes into its compiled program when
+``cfg.dynamics_enabled``:
+
+  * **availability churn** — a two-state arrival/dropout Markov process
+    per client: an available client drops with prob ``cfg.churn`` per
+    round, an unavailable one rejoins with prob ``cfg.rejoin_prob``.
+    Round-start availability gates auction *eligibility* (an offline
+    client cannot bid); a winner that goes offline mid-round (another
+    ``churn`` draw) is DROPPED.
+  * **stragglers** — per-client compute+network latency sampled from the
+    existing energy-heterogeneity profile: the compute term scales with
+    the client's local sample count (the same ``Ns_i`` that drives eq 11
+    energy) and a profile-dependent slowdown factor —
+    ``energy`` (default) maps low residual energy to up to ~3x slowdown,
+    ``uniform``/``lognormal`` are energy-independent noise, ``none`` is
+    deterministic.  Latency is expressed in units of the fleet-mean
+    round time, so ``cfg.deadline`` has a scale-free meaning.
+  * **deadline misses** — à la FedCS: a surviving winner whose latency
+    exceeds ``cfg.deadline`` (when positive) is LATE — its update still
+    exists but arrives after the round closes (the buffered aggregation
+    path folds it in later; the sync path loses it).
+
+Everything is a pure function of ``(state, key)`` under a **dedicated
+PRNG key stream** (:func:`dynamics_key`), disjoint from the server's
+selection/init chain — that separation is what keeps ``--churn 0`` runs
+bit-identical to the dynamics-free path (regression-tested in
+tests/test_dynamics.py).
+
+Outcome encoding (int32, per client): 0 = not selected this round,
+1 = COMPLETED, 2 = LATE, 3 = DROPPED.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+
+# per-winner outcome codes (see module docstring)
+NOT_SELECTED = 0
+COMPLETED = 1
+LATE = 2
+DROPPED = 3
+
+STRAGGLER_PROFILES = ("energy", "uniform", "lognormal", "none")
+
+# fold_in tag separating the dynamics chain from the selection chain
+_DYN_STREAM_TAG = 0x5D7A11CE
+
+
+@dataclass
+class DynamicsState:
+    """Carried fleet-dynamics state (pytree; flows through jit like
+    SelectionState).  ``avail`` is the churn process's current
+    availability mask."""
+
+    avail: jnp.ndarray          # (N,) bool — client reachable this round
+
+
+jax.tree_util.register_dataclass(
+    DynamicsState, data_fields=["avail"], meta_fields=[])
+
+
+def dynamics_key(cfg: FLConfig) -> jnp.ndarray:
+    """Root of the DEDICATED dynamics key stream: folded off the run seed
+    with a fixed tag so it never collides with (or consumes from) the
+    server's selection/init split chain.  Runs with identical seeds but
+    different dynamics settings therefore see identical selection keys."""
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                              _DYN_STREAM_TAG)
+
+
+def init_dynamics(cfg: FLConfig) -> DynamicsState:
+    """Round-0 dynamics state: everyone starts available (the churn
+    process mixes toward its stationary split within a few rounds)."""
+    return DynamicsState(avail=jnp.ones((cfg.num_clients,), bool))
+
+
+# ----------------------------------------------------------------------
+# latency model
+# ----------------------------------------------------------------------
+
+def latency_scale(cfg: FLConfig, key, residual: jnp.ndarray) -> jnp.ndarray:
+    """Per-client slowdown factor under ``cfg.straggler_profile``.
+
+    ``energy`` ties the factor to the SAME heterogeneity profile the
+    auction's cost function already prices: a full battery runs at 1x, an
+    empty one at ~3x (edge devices throttle compute as charge drops), plus
+    a small jittered component so equal-energy clients still diverge.
+    """
+    p = cfg.straggler_profile
+    if p == "none":
+        return jnp.ones_like(residual)
+    if p == "uniform":
+        return jax.random.uniform(key, residual.shape, minval=0.5,
+                                  maxval=2.0)
+    if p == "lognormal":
+        return jnp.exp(0.5 * jax.random.normal(key, residual.shape))
+    if p == "energy":
+        frac = jnp.clip(residual / 100.0, 0.0, 1.0)
+        jitter = jax.random.uniform(key, residual.shape, minval=0.9,
+                                    maxval=1.1)
+        return (1.0 + 2.0 * (1.0 - frac)) * jitter
+    raise ValueError(f"unknown straggler_profile={p!r}; "
+                     f"expected {STRAGGLER_PROFILES}")
+
+
+def round_latency(cfg: FLConfig, key, residual: jnp.ndarray,
+                  local_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Per-client compute+network latency in units of the fleet-mean
+    round time: compute scales with the local sample count (eq 11's
+    ``Ns_i``) times the straggler factor; the additive term is the
+    (size-independent) model up/download."""
+    sizes = local_sizes.astype(jnp.float32)
+    compute = sizes / jnp.maximum(sizes.mean(), 1.0)
+    return compute * latency_scale(cfg, key, residual) + 0.05
+
+
+# ----------------------------------------------------------------------
+# the per-round fault step
+# ----------------------------------------------------------------------
+
+def fault_step(cfg: FLConfig, key, win: jnp.ndarray, avail: jnp.ndarray,
+               residual: jnp.ndarray, local_sizes: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One round of the fault model.  Pure and jittable — the fused round
+    body calls this inside its compiled program; tests call it standalone.
+
+    Args: ``win`` (N,) bool auction winners, ``avail`` (N,) bool
+    round-start availability, ``residual``/``local_sizes`` the
+    SelectionState columns the latency model reads.
+
+    Returns ``(outcome, latency, new_avail)``: (N,) int32 outcome codes
+    (NOT_SELECTED for non-winners), (N,) float32 latencies, and the next
+    round's availability mask (winners that dropped mid-round start the
+    next round offline; non-winners churn independently).
+    """
+    k_mid, k_lat, k_drop, k_join = jax.random.split(key, 4)
+    lat = round_latency(cfg, k_lat, residual, local_sizes)
+
+    # mid-round dropout: a second churn draw — being selected doesn't
+    # shield a client from losing connectivity while it trains
+    mid_drop = jax.random.bernoulli(k_mid, cfg.churn, win.shape)
+    survived = win & avail & ~mid_drop
+    missed = (cfg.deadline > 0.0) & (lat > cfg.deadline)
+    outcome = jnp.where(
+        win,
+        jnp.where(survived,
+                  jnp.where(missed, LATE, COMPLETED),
+                  DROPPED),
+        NOT_SELECTED).astype(jnp.int32)
+
+    # availability churn for the next round (arrival/dropout process);
+    # mid-round droppers are offline regardless of their churn draw
+    drop = jax.random.bernoulli(k_drop, cfg.churn, avail.shape)
+    join = jax.random.bernoulli(k_join, cfg.rejoin_prob, avail.shape)
+    new_avail = jnp.where(avail, ~drop, join) & ~(win & mid_drop)
+    return outcome, lat, new_avail
+
+
+def update_staleness(staleness: jnp.ndarray,
+                     outcome: jnp.ndarray) -> jnp.ndarray:
+    """The SelectionState staleness counter: rounds since a client last
+    COMPLETED a round (its view of the global model ages by one round
+    unless its update landed synchronously this round)."""
+    return jnp.where(outcome == COMPLETED, 0,
+                     staleness + 1).astype(jnp.int32)
+
+
+def outcome_metrics(outcome: jnp.ndarray,
+                    staleness: jnp.ndarray) -> dict:
+    """On-device per-round dynamics scalars for the fused metrics dict
+    (fetched with the round's one batched drain — no extra sync)."""
+    return {
+        "num_completed": (outcome == COMPLETED).sum(),
+        "num_late": (outcome == LATE).sum(),
+        "num_dropped": (outcome == DROPPED).sum(),
+        "staleness_mean": staleness.astype(jnp.float32).mean(),
+        "staleness_max": staleness.max(),
+    }
+
+
+# ----------------------------------------------------------------------
+# host-side helpers (server aggregation path)
+# ----------------------------------------------------------------------
+
+def split_outcomes(sel_idx: np.ndarray, outcome_np: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Partition the fetched winner indices by outcome code:
+    ``(completed, late, dropped)`` — the server trains ``completed``
+    (plus replacements) synchronously, routes ``late`` to the buffered
+    path, and resamples ``dropped``."""
+    codes = outcome_np[sel_idx]
+    return (sel_idx[codes == COMPLETED], sel_idx[codes == LATE],
+            sel_idx[codes == DROPPED])
+
+
+def staleness_weight(cfg: FLConfig, tau: int) -> float:
+    """FedBuff-style staleness discount for a buffered update folded
+    ``tau`` rounds after its dispatch: ``(1 + tau) ** -alpha``."""
+    return float((1.0 + float(tau)) ** -cfg.staleness_alpha)
