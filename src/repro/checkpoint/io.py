@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from typing import Any, Dict, Tuple
 
 import jax
@@ -18,6 +19,12 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(
             str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if key in flat:
+            # two distinct leaves stringifying to one key would silently
+            # drop the first on save and restore garbage into both
+            raise ValueError(
+                f"duplicate flattened checkpoint key {key!r}: the tree "
+                "has two leaves whose paths stringify identically")
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:   # npz can't store ml_dtypes natively
             arr = arr.astype(np.float32)
@@ -50,6 +57,16 @@ def restore(path: str, like) -> Tuple[Any, int]:
     assert set(flat_like) == set(data.files), (
         f"checkpoint keys mismatch: {set(flat_like) ^ set(data.files)}")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    stored_td = manifest.get("treedef")
+    if stored_td is not None and stored_td != str(treedef):
+        # the key SET matching while the structure string differs means
+        # containers changed shape (e.g. a dataclass grew a field that
+        # flattens to nothing, or dict/list nesting moved) — restoring by
+        # key still works, but the caller should know the layouts drifted
+        warnings.warn(
+            "checkpoint treedef mismatch: stored structure differs from "
+            f"the restore target ({stored_td!r} != {str(treedef)!r}); "
+            "leaves are matched by flattened key", stacklevel=2)
     paths = [
         "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
         for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]

@@ -264,6 +264,47 @@ class FLConfig:
         the round programs are the exact pre-dynamics traces."""
         return self.churn > 0.0 or self.deadline > 0.0
 
+    # Byzantine robustness (repro.sim.dynamics corruption model +
+    # repro.core.aggregation screened FedAvg) — all off by default so
+    # the paper repro stays bit-identical to the pre-defense traces.
+    adversary_frac: float = 0.0   # fixed fraction of the fleet that is
+    #   Byzantine: round(frac * N) clients drawn once per run from the
+    #   dedicated adversary PRNG chain corrupt every update they send
+    attack: str = "none"          # none | nan | scale | signflip | noise
+    #   — how an adversary perturbs its param delta after local training
+    #   (on device, before aggregation); see dynamics.corrupt_updates
+    attack_scale: float = 25.0    # magnitude knob: multiplier for
+    #   scale/signflip, noise-std multiple of the cohort RMS for noise
+    defense: str = "none"         # none | clip | trimmed | median —
+    #   robust aggregation applied to the per-update matrix: all three
+    #   non-none defenses first QUARANTINE non-finite rows (excluded
+    #   from the weighted sum, survivor weights renormalized), then
+    #   'clip' l2-clips each row to clip_mult x a running median norm,
+    #   'trimmed'/'median' replace the weighted mean coordinate-wise
+    clip_mult: float = 2.0        # clip threshold = clip_mult * running
+    #                               median of per-update l2 norms
+    clip_beta: float = 0.3        # EMA rate of that running median
+    trim_frac: float = 0.3        # trimmed mean: ceil(frac * V) rows
+    #                               trimmed from EACH tail per coordinate
+    strike_threshold: float = 2.0  # auction reputation: a client with
+    #   this many (decayed) quarantine strikes loses eligibility
+    strike_decay: float = 0.98    # per-round multiplicative strike decay
+    #   (banned clients eventually fall below threshold and get re-probed)
+
+    @property
+    def adversary_enabled(self) -> bool:
+        """True when corrupted-update injection is active."""
+        return self.adversary_frac > 0.0 and self.attack != "none"
+
+    @property
+    def defended(self) -> bool:
+        """True when the server must route stage-3 through the
+        per-update screened-aggregation path (repro.core.aggregation)
+        instead of the runtimes' fused FedAvg.  False is the guard the
+        defense-off bit-identity regression rests on: with no defense
+        and no adversary the pre-defense code path runs untouched."""
+        return self.defense != "none" or self.adversary_enabled
+
     # data heterogeneity (paper §V-A)
     non_iid_level: float = 1.0        # nu: fraction of a client's data w/ one label
     imbalance_low: float = 1.0 / 6.0  # local size in [varpi/6, 2*varpi]

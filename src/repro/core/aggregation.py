@@ -1,0 +1,244 @@
+"""Screened robust FedAvg: the defended aggregation layer.
+
+The cohort runtimes' fast paths fuse the FedAvg reduction into their
+compiled training programs, which is exactly right until a Byzantine
+client returns a poisoned update — a fused ``sum_k p_k w_k`` happily
+propagates one NaN row into the global model.  When
+``cfg.defended`` (any ``--defense`` or an active ``--attack``) the
+server routes stage-3 through this module instead: every runtime
+returns the cohort's *per-client flat param deltas* as one ``(C, D)``
+matrix (:class:`UpdateBatch`) and ONE fused jitted program —
+:func:`make_screened_step` — applies the corruption model
+(repro.sim.dynamics.corrupt_updates, the attack happens "on device,
+after local training"), screens, aggregates and updates the auction
+reputation, all on device:
+
+  1. **quarantine** — rows with any non-finite coordinate are excluded
+     from the weighted sum and the surviving rows' weights are
+     renormalized (never silently zeroed: a quarantined update
+     contributes *nothing*, it does not drag the aggregate toward 0).
+     Quarantine precedes every other screen because a NaN row poisons
+     any statistic computed over it (norms, medians, sorts).
+  2. **defense** (``cfg.defense``):
+     ``clip``    — each surviving row's l2 norm is clipped to
+                   ``clip_mult x`` a running median norm (EMA with rate
+                   ``clip_beta`` over per-round cohort medians), then
+                   the renormalized weighted mean;
+     ``trimmed`` — coordinate-wise trimmed mean: ``ceil(trim_frac * V)``
+                   values trimmed from EACH tail per coordinate
+                   (unweighted over the kept band, the standard
+                   estimator);
+     ``median``  — coordinate-wise median of the surviving rows;
+     ``none``    — the plain weighted sum (corrupted rows included:
+                   this is the attack-baseline the benchmark degrades).
+  3. **reputation** — one on-device scatter adds a strike per
+     quarantined client into ``SelectionState.strikes``; the fused
+     round step bans clients at ``strike_threshold`` and decays strikes
+     per round (repro.core.selection) — no new per-round host syncs,
+     the winner mask stays the only unconditional fetch.
+
+Bit-equality boundary: with ``cfg.defended`` False the server never
+constructs any of this and the pre-defense traces are unchanged.  The
+screened program itself is compiled ONCE per run: the row axis is
+padded to the static :func:`screen_capacity` bound, so shifting cohort
+sizes never retrace (asserted in tests/test_robust.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.configs.base import FLConfig
+
+DEFENSES = ("none", "clip", "trimmed", "median")
+
+
+@dataclass
+class UpdateBatch:
+    """A cohort's per-client updates, as the runtimes hand them to the
+    screened aggregation: ``deltas`` is the (C, D) float32 matrix of
+    flat param deltas vs the dispatched globals (row order = packer
+    order, padding rows all-zero), ``weights`` the matching (C,) global
+    FedAvg weights (sum to 1 over real rows, 0 on padding), and
+    ``client_idx`` the (C,) global client ids (-1 on padding)."""
+
+    deltas: jnp.ndarray
+    weights: np.ndarray
+    client_idx: np.ndarray
+
+
+def flat_size(params) -> int:
+    """Total flat parameter count D (leaf order = jax.tree.leaves)."""
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(params)))
+
+
+def screen_capacity(cfg: FLConfig) -> int:
+    """Static row-capacity bound of the screened program: the largest
+    cohort any selection scheme can produce (per-cluster k x J or the
+    random scheme's K), rounded up to a power of two.  One compile per
+    run — shifting cohort sizes pad up to this and never retrace."""
+    from repro.core.selection import k_per_cluster
+    k_total = max(int(round(cfg.select_ratio * cfg.num_clients)), 1)
+    bound = min(cfg.num_clients,
+                max(k_total, k_per_cluster(cfg) * cfg.num_clusters))
+    cap = 1
+    while cap < bound:
+        cap *= 2
+    return cap
+
+
+def make_flat_delta(params_like):
+    """Jitted ``(new_params, old_params) -> (D,) float32`` flat delta —
+    the sequential runtime's per-client flattening; leaf order matches
+    every other runtime's (jax.tree.leaves)."""
+    def flat(new, old):
+        d = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), new, old)
+        return jnp.concatenate([x.reshape(-1) for x in jax.tree.leaves(d)])
+
+    return jax.jit(flat)
+
+
+def make_apply_delta(params_like):
+    """Jitted ``(params, (D,) flat delta) -> params``: split, reshape
+    and add — the inverse of the runtimes' flattening."""
+    leaves = jax.tree.leaves(params_like)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+    treedef = jax.tree.structure(params_like)
+
+    def apply(params, flat):
+        plv = jax.tree.leaves(params)
+        new = [p + jax.lax.dynamic_slice_in_dim(flat, int(o), n)
+               .reshape(s).astype(p.dtype)
+               for p, o, n, s in zip(plv, offsets[:-1], sizes, shapes)]
+        return jax.tree.unflatten(treedef, new)
+
+    return jax.jit(apply)
+
+
+def _percentile_sorted(sorted_vals: jnp.ndarray, v: jnp.ndarray,
+                       q: float) -> jnp.ndarray:
+    """q-th percentile of the first ``v`` entries of an ascending-sorted
+    vector (invalid entries sorted to +inf at the tail); 0 when v = 0."""
+    cap = sorted_vals.shape[0]
+    idx = jnp.clip((q * (v - 1).astype(jnp.float32)).astype(jnp.int32),
+                   0, cap - 1)
+    return jnp.where(v > 0, jnp.take(sorted_vals, idx), 0.0)
+
+
+def make_screened_step(cfg: FLConfig):
+    """Compile the fused corrupt -> quarantine -> defend -> aggregate ->
+    reputation program.  Signature::
+
+        (deltas (cap, D) f32, weights (cap,) f32, valid (cap,) bool,
+         adv (cap,) bool, ids (cap,) int32, strikes (N,) f32,
+         clip_state () f32, key)
+          -> (agg_delta (D,), new_strikes (N,), new_clip_state (),
+              report: dict of device scalars)
+
+    ``clip_state`` carries the running median update norm (0 = unseeded);
+    the report rides the server's pending buffer and drains with the one
+    batched logging fetch.  ``cfg`` is closed over (static)."""
+    # deferred: repro.sim.runtime (imported by the repro.sim package
+    # init) needs UpdateBatch from this module, so a top-level dynamics
+    # import here would be circular
+    from repro.sim import dynamics as DYN
+    defense = cfg.defense
+    if defense not in DEFENSES:
+        raise ValueError(f"unknown defense={defense!r}; expected {DEFENSES}")
+
+    def screen(deltas, weights, valid, adv, ids, strikes, clip_state, key):
+        obs.jax_stats.note_trace("screened_agg")   # trace-time only
+        cap = deltas.shape[0]
+        deltas = DYN.corrupt_updates(cfg, key, deltas, adv, valid)
+        finite = jnp.isfinite(deltas).all(axis=1)
+        if defense == "none":
+            # no screening: corrupted rows flow into the aggregate (the
+            # attack baseline) — quarantine must not silently save it
+            quarantined = jnp.zeros_like(valid)
+            ok = valid
+        else:
+            quarantined = valid & ~finite
+            ok = valid & finite
+        okf = ok.astype(jnp.float32)
+        # metrics are computed over finite valid rows only, so a NaN row
+        # never poisons the norm statistics even with the defense off
+        mok = valid & finite
+        safe = jnp.where(mok[:, None], deltas, 0.0)
+        norms = jnp.sqrt(jnp.square(safe).sum(axis=1))
+        v_metric = mok.sum()
+        sorted_norms = jnp.sort(jnp.where(mok, norms, jnp.inf))
+        p50 = _percentile_sorted(sorted_norms, v_metric, 0.50)
+        p99 = _percentile_sorted(sorted_norms, v_metric, 0.99)
+        # running median norm (EMA over round medians; seeds on first
+        # non-empty round) — the clip defense's threshold scale
+        new_clip = jnp.where(
+            v_metric > 0,
+            jnp.where(clip_state > 0,
+                      (1.0 - cfg.clip_beta) * clip_state
+                      + cfg.clip_beta * p50,
+                      p50),
+            clip_state)
+        thr = cfg.clip_mult * new_clip
+        clipped = mok & (norms > thr)
+        v = ok.sum()
+
+        if defense == "none":
+            agg = (weights * okf) @ deltas
+        elif defense == "clip":
+            factor = jnp.where(clipped, thr / jnp.maximum(norms, 1e-12),
+                               1.0)
+            w_ok = weights * okf
+            mass = w_ok.sum()
+            agg = jnp.where(mass > 0,
+                            (w_ok / jnp.maximum(mass, 1e-12))
+                            @ (safe * factor[:, None]),
+                            jnp.zeros((deltas.shape[1],), jnp.float32))
+        elif defense == "trimmed":
+            vals = jnp.where(ok[:, None], deltas, jnp.inf)
+            s = jnp.sort(vals, axis=0)
+            k = jnp.ceil(cfg.trim_frac * v.astype(jnp.float32)
+                         ).astype(jnp.int32)
+            k = jnp.clip(k, 0, jnp.maximum((v - 1) // 2, 0))
+            ranks = jnp.arange(cap)[:, None]
+            keep = (ranks >= k) & (ranks < v - k)
+            kept = jnp.where(keep, s, 0.0)
+            agg = jnp.where(v > 0,
+                            kept.sum(axis=0)
+                            / jnp.maximum(v - 2 * k, 1).astype(jnp.float32),
+                            jnp.zeros((deltas.shape[1],), jnp.float32))
+        else:   # median
+            vals = jnp.where(ok[:, None], deltas, jnp.inf)
+            s = jnp.sort(vals, axis=0)
+            lo = jnp.clip((v - 1) // 2, 0, cap - 1)
+            hi = jnp.clip(v // 2, 0, cap - 1)
+            agg = jnp.where(v > 0,
+                            0.5 * (jnp.take(s, lo, axis=0)
+                                   + jnp.take(s, hi, axis=0)),
+                            jnp.zeros((deltas.shape[1],), jnp.float32))
+
+        # reputation feedback: one on-device scatter per screen — strikes
+        # reach the host only through metrics drained at logging
+        # boundaries (num_banned), never a dedicated per-round sync
+        n = strikes.shape[0]
+        new_strikes = strikes.at[jnp.clip(ids, 0, n - 1)].add(
+            jnp.where(quarantined, 1.0, 0.0))
+        report: Dict[str, jnp.ndarray] = {
+            "num_quarantined": quarantined.sum(),
+            "num_survivors": v,
+            "clipped_frac": jnp.where(
+                v_metric > 0,
+                clipped.sum() / jnp.maximum(v_metric, 1).astype(jnp.float32),
+                0.0),
+            "update_norm_p50": p50,
+            "update_norm_p99": p99,
+        }
+        return agg, new_strikes, new_clip, report
+
+    return jax.jit(screen)

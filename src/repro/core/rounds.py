@@ -72,6 +72,12 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
     ``avail`` is the fleet-dynamics availability mask (None = every
     dynamics-free trace is unchanged)."""
     obs.jax_stats.note_trace("round_step")   # fires at (re)trace time only
+    if state.strikes is not None:
+        # auction reputation: quarantine repeat offenders (strikes at or
+        # above the ban threshold) lose eligibility exactly like offline
+        # clients — the pure 'random' baseline stays blind, same as avail
+        trust = state.strikes < cfg.strike_threshold
+        avail = trust if avail is None else (avail & trust)
     win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl,
                                  avail=avail)
     bids = info["bids"]
@@ -91,6 +97,9 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
                     if count_hists is not None else jnp.float32(0.0)),
     }
     metrics.update(E.energy_stats(new_state.residual))
+    if state.strikes is not None:
+        metrics["num_banned"] = (
+            state.strikes >= cfg.strike_threshold).sum()
     return new_state, win, metrics
 
 

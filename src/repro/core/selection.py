@@ -41,12 +41,19 @@ class SelectionState:
     # dynamics-free round programs trace exactly as before — the churn-0
     # bit-identity regression depends on this)
     staleness: Optional[jnp.ndarray] = None
+    # (N,) float32 quarantine-strike reputation counter, or None when the
+    # defended aggregation path is off (same Optional-last-field pattern
+    # as staleness — the defense-off bit-identity regression depends on
+    # it).  The screened aggregation scatter-adds a strike per quarantined
+    # update; a client at >= cfg.strike_threshold strikes loses auction
+    # eligibility until per-round decay (update_after_round) re-admits it.
+    strikes: Optional[jnp.ndarray] = None
 
 
 jax.tree_util.register_dataclass(
     SelectionState,
     data_fields=["clusters", "residual", "history", "local_sizes",
-                 "staleness"],
+                 "staleness", "strikes"],
     meta_fields=[])
 
 
@@ -179,8 +186,13 @@ def select_round(state: SelectionState, cfg: FLConfig, key,
 
 def update_after_round(state: SelectionState, win: jnp.ndarray,
                        cfg: FLConfig) -> SelectionState:
-    return replace(
+    new = replace(
         state,
         residual=E.apply_round(state.residual, win, state.local_sizes, cfg),
         history=state.history + win.astype(jnp.int32),
     )
+    if state.strikes is not None:
+        # reputation decays once per round: a banned repeat offender
+        # eventually falls back under the threshold and gets re-probed
+        new = replace(new, strikes=state.strikes * cfg.strike_decay)
+    return new

@@ -46,7 +46,9 @@ so churn-0 runs stay bit-identical (tests/test_dynamics.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import json
+import os
+from dataclasses import dataclass, replace as dc_replace
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -55,6 +57,7 @@ import numpy as np
 
 from repro import obs
 from repro.configs.base import FLConfig
+from repro.core import aggregation as AGG
 from repro.core import clustering as CL
 from repro.core import energy as EN
 from repro.core import rounds as RND
@@ -76,6 +79,10 @@ class RoundLog:
     server_reward: float
     client_reward_sum: float
     vds_gap: float
+    # True when the round was off the eval cadence (test_acc NaN by
+    # design); a NaN with eval_skipped=False means the eval RAN and the
+    # model diverged — the two cases were indistinguishable before
+    eval_skipped: bool = False
 
 
 @dataclass
@@ -91,6 +98,10 @@ class _PendingRound:
     metrics: Any
     eval_pair: Optional[Any]
     dyn: Optional[Dict[str, float]] = None
+    # screened-aggregation reports (device scalar dicts) for every
+    # defended sub-cohort this round dispatched (late first, main last);
+    # they drain with the same batched fetch as the metrics
+    defense: Optional[List[Any]] = None
 
 
 @dataclass
@@ -113,6 +124,10 @@ _DYN_METRIC_KEYS = ("num_completed", "num_late", "num_dropped",
                     "staleness_mean", "staleness_max", "mean_latency",
                     "num_avail")
 
+# device metric keys the defended round step adds (repro.core.rounds
+# emits num_banned only when SelectionState carries strikes)
+_DEF_METRIC_KEYS = ("num_banned",)
+
 
 class FederatedServer:
     def __init__(self, cfg: FLConfig, adapter: ModelAdapter,
@@ -132,6 +147,7 @@ class FederatedServer:
 
         sizes = jnp.asarray([c.size for c in clients], jnp.int32)
         self.dynamics = cfg.dynamics_enabled
+        self.defended = cfg.defended
         self.state = SEL.SelectionState(
             clusters=jnp.zeros((cfg.num_clients,), jnp.int32),
             residual=EN.init_energy(cfg, self._next_key()),
@@ -141,6 +157,9 @@ class FederatedServer:
             # array leaf or the dynamics-free round traces would change
             staleness=(jnp.zeros((cfg.num_clients,), jnp.int32)
                        if self.dynamics else None),
+            # same rule for the reputation ledger with defenses off
+            strikes=(jnp.zeros((cfg.num_clients,), jnp.float32)
+                     if self.defended else None),
         )
         from repro.core.virtual_dataset import client_count_histograms
         from repro.data.partition import global_histogram
@@ -177,6 +196,30 @@ class FederatedServer:
                 lambda new, old: jax.tree.map(jnp.subtract, new, old))
             self._fold_one = jax.jit(
                 lambda p, d, c: jax.tree.map(lambda a, b: a + c * b, p, d))
+        if self.defended:
+            # Byzantine-tolerant stage 3 (repro.core.aggregation): the
+            # adversary chain + population mask are frozen at init (both
+            # pure functions of cfg — identical across runtimes and
+            # resumes); one screened program handles every cohort size by
+            # padding rows up to the static capacity
+            self._adv_root = DYN.adversary_key(cfg)
+            self._adv_mask = np.asarray(
+                obs.device_get(DYN.adversary_mask(cfg)), bool)
+            self._screen_cap = AGG.screen_capacity(cfg)
+            self._screen_step = AGG.make_screened_step(cfg)
+            self._apply_delta = AGG.make_apply_delta(self.params)
+            # jitted so the warm loop never runs eager index/key ops —
+            # those materialize scalar constants via implicit h2d
+            # transfers, which the sync auditor rejects
+            self._gather_rows = jax.jit(
+                lambda d, i: jnp.take(d, i, axis=0, mode="clip"))
+            self._fold_key = jax.jit(jax.random.fold_in)
+            # running median update norm (0 = unseeded), the clip
+            # defense's threshold scale; stays on device between rounds
+            self._clip_state = jnp.float32(0.0)
+            # host tallies filled at flush boundaries (launch summary)
+            self.defense_totals: Dict[str, int] = {"quarantined": 0,
+                                                   "banned_final": 0}
         # host mirror of participation counts: stage-3 shuffle seeding
         # reads history per winner, which on the device array cost one
         # int(history[i]) sync per client per round.
@@ -247,7 +290,7 @@ class FederatedServer:
         self.state = SEL.SelectionState(
             clusters=labels.astype(jnp.int32), residual=self.state.residual,
             history=self.state.history, local_sizes=self.state.local_sizes,
-            staleness=self.state.staleness)
+            staleness=self.state.staleness, strikes=self.state.strikes)
         if self.dynamics:
             self._host_clusters = np.asarray(obs.device_get(labels),
                                              np.int64)
@@ -256,6 +299,52 @@ class FederatedServer:
     def local_train(self, client_idx: int, global_params):
         return self.runtime.train_client(
             global_params, client_idx, int(self._host_history[client_idx]))
+
+    # -- defended aggregation ------------------------------------------
+    def _train_defended(self, params0, train_idx: np.ndarray, t: int,
+                        chan: int, strikes):
+        """Defended stage 3: the runtime returns the cohort's per-client
+        flat deltas, the fused screened program (repro.core.aggregation)
+        corrupts (adversary model), quarantines, defends, aggregates and
+        updates the reputation ledger in one call, and the screened
+        aggregate delta is applied to ``params0``.  ``chan`` separates
+        the per-round adversary key of the main (0) and buffered-late
+        (1) sub-cohorts so their corruption draws never collide.
+        Returns ``(new_params, report, new_strikes)`` — all None for an
+        empty cohort (strikes pass through unchanged)."""
+        upd = self.runtime.train_cohort_updates(params0, train_idx,
+                                                self._host_history)
+        if upd is None:
+            return None, None, strikes
+        ids = np.asarray(upd.client_idx, np.int32)
+        real = np.flatnonzero(ids >= 0).astype(np.int32)
+        if real.size == 0:
+            return None, None, strikes
+        cap = self._screen_cap
+        while cap < real.size:     # never hit: capacity bounds the cohort
+            cap *= 2
+        # compact the runtimes' padding rows out and pad to the one
+        # static capacity in a single on-device gather driven by a
+        # host-built index plan (padding slots gather row 0 and are
+        # masked by valid=False), so the screened program compiles
+        # exactly once and the warm loop's only h2d traffic is these
+        # explicit, counted plan arrays — no eager fill constants, which
+        # the sync auditor (correctly) rejects as implicit transfers
+        gidx = np.zeros((cap,), np.int32)
+        gidx[:real.size] = real
+        w = np.zeros((cap,), np.float32)
+        w[:real.size] = np.asarray(upd.weights, np.float32)[real]
+        idp = np.full((cap,), -1, np.int32)
+        idp[:real.size] = ids[real]
+        valid = idp >= 0
+        adv = valid & self._adv_mask[np.clip(idp, 0, None)]
+        gd, wd, vd, ad, idd, fold = obs.device_put(
+            (gidx, w, valid, adv, idp, np.uint32(2 * t + chan + 1)))
+        dpad = self._gather_rows(upd.deltas, gd)
+        key = self._fold_key(self._adv_root, fold)
+        agg, new_strikes, self._clip_state, report = self._screen_step(
+            dpad, wd, vd, ad, idd, strikes, self._clip_state, key)
+        return self._apply_delta(params0, agg), report, new_strikes
 
     # ------------------------------------------------------------------
     def _eval_due(self, t: int, final: bool = False) -> bool:
@@ -286,10 +375,18 @@ class FederatedServer:
             # stage 3: local training + aggregation (cohort runtime
             # backend); shuffle seeds read the pre-round host history
             # mirror
+            defense: Optional[List[Any]] = None
             with obs.span("round/train", round=t,
                           cohort=int(sel_idx.size)):
-                new_params = self.runtime.train_cohort(
-                    self.params, sel_idx, self._host_history)
+                if self.defended:
+                    new_params, rep, strikes = self._train_defended(
+                        self.params, sel_idx, t, 0, new_state.strikes)
+                    new_state = dc_replace(new_state, strikes=strikes)
+                    if rep is not None:
+                        defense = [rep]
+                else:
+                    new_params = self.runtime.train_cohort(
+                        self.params, sel_idx, self._host_history)
             if new_params is not None:
                 self.params = new_params
             else:
@@ -306,7 +403,8 @@ class FederatedServer:
             else:
                 ev = None
             self._pending.append(_PendingRound(
-                round=t, selected=sel_idx, metrics=metrics, eval_pair=ev))
+                round=t, selected=sel_idx, metrics=metrics, eval_pair=ev,
+                defense=defense))
 
     # -- fleet dynamics ------------------------------------------------
     def _log_empty_round(self, t: int) -> None:
@@ -404,13 +502,21 @@ class FederatedServer:
 
             params0 = self.params
             buffered = cfg.aggregation == "buffered"
+            defense: List[Any] = []
             if buffered and late.size:
                 # the late sub-cohort trains from the same globals it was
                 # dispatched with; its aggregate becomes a buffered delta
                 with obs.span("round/train_late", round=t,
                               cohort=int(late.size)):
-                    late_agg = self.runtime.train_cohort(
-                        params0, late, self._host_history)
+                    if self.defended:
+                        late_agg, rep, strikes = self._train_defended(
+                            params0, late, t, 1, new_state.strikes)
+                        new_state = dc_replace(new_state, strikes=strikes)
+                        if rep is not None:
+                            defense.append(rep)
+                    else:
+                        late_agg = self.runtime.train_cohort(
+                            params0, late, self._host_history)
                 if late_agg is not None:
                     self._late_buffer.append(_BufferedUpdate(
                         delta=self._delta_step(late_agg, params0),
@@ -418,8 +524,15 @@ class FederatedServer:
                         round=t, arrival=t + 1))
             with obs.span("round/train", round=t,
                           cohort=int(train_idx.size)):
-                new_params = self.runtime.train_cohort(
-                    params0, train_idx, self._host_history)
+                if self.defended:
+                    new_params, rep, strikes = self._train_defended(
+                        params0, train_idx, t, 0, new_state.strikes)
+                    new_state = dc_replace(new_state, strikes=strikes)
+                    if rep is not None:
+                        defense.append(rep)
+                else:
+                    new_params = self.runtime.train_cohort(
+                        params0, train_idx, self._host_history)
             if new_params is not None:
                 self.params = new_params
             else:
@@ -445,7 +558,7 @@ class FederatedServer:
                 ev = None
             self._pending.append(_PendingRound(
                 round=t, selected=sel_idx, metrics=metrics, eval_pair=ev,
-                dyn=dyn_row))
+                dyn=dyn_row, defense=defense or None))
 
     def _flush_pending(self) -> None:
         """Drain the pending buffer with ONE batched device_get and turn
@@ -456,12 +569,21 @@ class FederatedServer:
         with obs.span("round/drain", rounds=len(self._pending),
                       first=self._pending[0].round):
             fetched = obs.device_get(
-                [(p.metrics, p.eval_pair) for p in self._pending])
-        for p, (m, ev) in zip(self._pending, fetched):
-            acc, loss = ((float(ev[0]), float(ev[1])) if ev is not None
+                [(p.metrics, p.eval_pair, p.defense)
+                 for p in self._pending])
+        for p, (m, ev, defs) in zip(self._pending, fetched):
+            skipped = ev is None
+            acc, loss = ((float(ev[0]), float(ev[1])) if not skipped
                          else (float("nan"), float("nan")))
-            if ev is not None:
+            if not skipped:
                 self._last_eval = (acc, loss)
+                if not (np.isfinite(acc) and np.isfinite(loss)):
+                    # the eval RAN and came back non-finite: the model
+                    # diverged (e.g. an unscreened NaN update) — distinct
+                    # from an off-cadence skip, and loud in the log
+                    obs.OBS.counter("round/diverged")
+                    obs.OBS.event("defense", name="round/diverged",
+                                  round=p.round)
             self.total_client_reward += float(m["client_reward_sum"])
             self.logs.append(RoundLog(
                 round=p.round, selected=p.selected, test_acc=acc,
@@ -469,15 +591,32 @@ class FederatedServer:
                 mean_bid=float(m["mean_bid"]),
                 server_reward=float(m["server_reward"]),
                 client_reward_sum=float(m["client_reward_sum"]),
-                vds_gap=float(m["vds_gap"])))
+                vds_gap=float(m["vds_gap"]), eval_skipped=skipped))
             # per-round series row: every scalar is already a host float
             # from the batched fetch above — recording adds no sync
             extra: Dict[str, float] = {}
-            for k in _DYN_METRIC_KEYS:
+            for k in _DYN_METRIC_KEYS + _DEF_METRIC_KEYS:
                 if k in m:
                     extra[k] = float(m[k])
             if p.dyn is not None:
                 extra.update({k: float(v) for k, v in p.dyn.items()})
+            if "num_banned" in extra:
+                self.defense_totals["banned_final"] = int(
+                    extra["num_banned"])
+            if defs:
+                nq = sum(float(d["num_quarantined"]) for d in defs)
+                self.defense_totals["quarantined"] += int(nq)
+                main = defs[-1]     # the synchronous cohort's report
+                extra.update(
+                    num_quarantined=nq,
+                    num_survivors=float(main["num_survivors"]),
+                    clipped_frac=float(main["clipped_frac"]),
+                    update_norm_p50=float(main["update_norm_p50"]),
+                    update_norm_p99=float(main["update_norm_p99"]))
+                if nq > 0:
+                    obs.OBS.counter("defense/quarantined", int(nq))
+                    obs.OBS.event("defense", name="quarantine",
+                                  round=p.round, quarantined=int(nq))
             obs.OBS.record_round(
                 p.round, test_acc=acc, test_loss=loss,
                 energy_std=float(m["energy_std"]),
@@ -485,9 +624,75 @@ class FederatedServer:
                 server_reward=float(m["server_reward"]),
                 client_reward_sum=float(m["client_reward_sum"]),
                 vds_gap=float(m["vds_gap"]),
-                num_selected=int(p.selected.size), **extra)
+                num_selected=int(p.selected.size),
+                eval_skipped=skipped, **extra)
         self._pending.clear()
         obs.flush()        # the logging boundary: sinks see I/O only here
+
+    # -- crash tolerance -----------------------------------------------
+    def _ckpt_tree(self) -> Dict[str, Any]:
+        """Everything array-valued the round loop's future depends on.
+        The in-flight FedBuff late buffer is deliberately NOT saved: a
+        crash loses updates that never folded into the model, which is
+        exactly FedBuff's semantics for a server restart."""
+        tree: Dict[str, Any] = {
+            "params": self.params, "state": self.state, "key": self.key,
+            # int32: restore round-trips leaves through jnp, which would
+            # silently narrow int64 under default (x64-off) jax config
+            "host_history": self._host_history.astype(np.int32)}
+        if self.dynamics:
+            tree["dyn_avail"] = self.dyn_state.avail
+            tree["dyn_key"] = self._dyn_key
+        if self.defended:
+            tree["clip_state"] = self._clip_state
+        return tree
+
+    def save_checkpoint(self, path: str, step: int) -> None:
+        """Persist server params + selection/dynamics/defense state so a
+        crashed run resumes from the last boundary (repro.checkpoint.io);
+        host-side rng state and reward tally ride the json manifest."""
+        from repro.checkpoint import io as CKPT
+        extra: Dict[str, Any] = {
+            "total_client_reward": self.total_client_reward}
+        if self.dynamics:
+            # the replacement sampler's host rng state is json-friendly
+            # (PCG64 state dict of ints) — resumed draws continue the
+            # exact chain a continuous run would have used
+            extra["dyn_rng_state"] = self._dyn_rng.bit_generator.state
+        with obs.span("run/checkpoint", step=step):
+            CKPT.save(path, self._ckpt_tree(), step=step, extra=extra)
+
+    def load_checkpoint(self, path: str) -> int:
+        """Restore a :meth:`save_checkpoint` snapshot and return the next
+        round index.  Stage-1 clustering must NOT be re-run afterwards:
+        the restored key already reflects its chain consumption and the
+        cluster ids live in the restored SelectionState."""
+        from repro.checkpoint import io as CKPT
+        tree, step = CKPT.restore(path, self._ckpt_tree())
+        self.params = tree["params"]
+        self.state = tree["state"]
+        self.key = tree["key"]
+        self._host_history = np.asarray(
+            obs.device_get(tree["host_history"]), np.int64)
+        if self.dynamics:
+            self.dyn_state = DYN.DynamicsState(avail=tree["dyn_avail"])
+            self._dyn_key = tree["dyn_key"]
+            self._host_avail = np.asarray(
+                obs.device_get(tree["dyn_avail"]), bool)
+            self._host_clusters = np.asarray(
+                obs.device_get(self.state.clusters), np.int64)
+        if self.defended:
+            self._clip_state = tree["clip_state"]
+        manifest = path.removesuffix(".npz") + ".json"
+        if os.path.exists(manifest):
+            with open(manifest) as f:
+                extra = json.load(f).get("extra") or {}
+            self.total_client_reward = float(
+                extra.get("total_client_reward", 0.0))
+            st = extra.get("dyn_rng_state")
+            if self.dynamics and st is not None:
+                self._dyn_rng.bit_generator.state = st
+        return step
 
     def run_round(self, t: int) -> RoundLog:
         """One synchronous FL round (dispatch + immediate flush) — the
@@ -498,7 +703,9 @@ class FederatedServer:
 
     # ------------------------------------------------------------------
     def run(self, rounds: Optional[int] = None, verbose: bool = False,
-            audit_sync: bool = False, audit_warm_rounds: int = 2):
+            audit_sync: bool = False, audit_warm_rounds: int = 2,
+            checkpoint_every: int = 0,
+            checkpoint_path: Optional[str] = None, resume: bool = False):
         """The async round loop.  ``verbose`` prints a progress line
         every 5 rounds showing the *last drained* eval (NaN until one
         drains) — verbosity must never change the measured eval cadence
@@ -507,15 +714,30 @@ class FederatedServer:
         tests/test_obs.py).  ``audit_sync`` wraps every dispatch from
         round ``audit_warm_rounds`` on in the transfer-guard sync
         auditor: an implicit host transfer inside the warm loop raises
-        at the offending op (obs.sync_audit)."""
-        with obs.span("run/cluster", scheme=self.cfg.scheme):
-            self.cluster()
+        at the offending op (obs.sync_audit).
+
+        ``checkpoint_every`` > 0 (with a ``checkpoint_path``) snapshots
+        params + server state every that many rounds; ``resume`` picks
+        the run back up from an existing snapshot — stage-1 clustering
+        is skipped because the restored state already carries its result
+        (and the restored key its chain consumption), so a resumed
+        dynamics-free run walks the remaining rounds bit-identically to
+        an uninterrupted one (tests/test_checkpoint.py)."""
+        start = 0
+        if resume and checkpoint_path is not None and os.path.exists(
+                checkpoint_path.removesuffix(".npz") + ".npz"):
+            start = self.load_checkpoint(checkpoint_path)
+            obs.log(f"resumed checkpoint {checkpoint_path!r} "
+                    f"at round {start}")
+        if start == 0:
+            with obs.span("run/cluster", scheme=self.cfg.scheme):
+                self.cluster()
         warmup = getattr(self.runtime, "warmup", None)
         if warmup is not None:    # device runtime: compile every class
             with obs.span("run/warmup"):
                 warmup(self.params)
         T = rounds if rounds is not None else self.cfg.rounds
-        for t in range(T):
+        for t in range(start, T):
             printing = verbose and (t % 5 == 0 or t == T - 1)
             final = t == T - 1
             if audit_sync and t >= audit_warm_rounds:
@@ -534,5 +756,11 @@ class FederatedServer:
                         f"E_std={log.energy_std:.3f} "
                         f"bid={log.mean_bid:.3f} "
                         f"vds_gap={log.vds_gap:.3f}")
+            if (checkpoint_every > 0 and checkpoint_path is not None
+                    and (t + 1) % checkpoint_every == 0 and not final):
+                # flush first so the log stream is consistent up to the
+                # snapshot boundary a resumed run continues from
+                self._flush_pending()
+                self.save_checkpoint(checkpoint_path, t + 1)
         self._flush_pending()
         return self.logs

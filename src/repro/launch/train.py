@@ -97,7 +97,9 @@ def run_paper(args) -> dict:
         churn=args.churn, deadline=args.deadline,
         straggler_profile=args.straggler_profile,
         aggregation=args.aggregation, buffer_goal=args.buffer_goal,
-        buffer_timeout=args.buffer_timeout)
+        buffer_timeout=args.buffer_timeout,
+        adversary_frac=args.adversary_frac, attack=args.attack,
+        defense=args.defense)
     train, test = make_image_dataset(args.dataset,
                                      n_train=args.pool, n_test=args.pool // 6,
                                      seed=args.seed)
@@ -107,7 +109,10 @@ def run_paper(args) -> dict:
     srv = FederatedServer(cfg, adapter, train.x, train.y, clients,
                           {"x": test.x[:ntest], "y": test.y[:ntest]})
     t0 = time.time()
-    logs = srv.run(verbose=not args.quiet, audit_sync=args.audit_sync)
+    logs = srv.run(verbose=not args.quiet, audit_sync=args.audit_sync,
+                   checkpoint_every=args.checkpoint_every,
+                   checkpoint_path=args.checkpoint_path,
+                   resume=args.resume)
     out = {
         "mode": "paper", "scheme": args.scheme, "nu": args.nu,
         "aggregator": args.aggregator, "dataset": args.dataset,
@@ -132,6 +137,14 @@ def run_paper(args) -> dict:
             "num_completed": int((codes == DYN.COMPLETED).sum()),
             "num_late": int((codes == DYN.LATE).sum()),
             "num_dropped": int((codes == DYN.DROPPED).sum()),
+        }
+    if srv.defended:
+        out["defense"] = {
+            "attack": cfg.attack, "adversary_frac": cfg.adversary_frac,
+            "defense": cfg.defense,
+            "num_adversaries": int(srv._adv_mask.sum()),
+            "num_quarantined": srv.defense_totals["quarantined"],
+            "num_banned_final": srv.defense_totals["banned_final"],
         }
     return out
 
@@ -312,6 +325,37 @@ def main():
     ap.add_argument("--buffer-timeout", type=int, default=4,
                     help="buffered aggregation: fold once the oldest "
                          "arrived update is this many rounds stale")
+    ap.add_argument("--adversary-frac", type=float, default=0.0,
+                    help="Byzantine robustness: fraction of the fleet "
+                         "corrupting its update after local training "
+                         "(seed-deterministic population; 0 disables — "
+                         "runs stay bit-identical to the attack-free "
+                         "path)")
+    ap.add_argument("--attack", default="none",
+                    choices=["none", "nan", "scale", "signflip", "noise"],
+                    help="corruption model applied to adversarial "
+                         "winners' param deltas: 'nan' poisons, 'scale' "
+                         "amplifies, 'signflip' amplifies and negates, "
+                         "'noise' adds gaussian noise at attack-scale x "
+                         "the cohort RMS delta")
+    ap.add_argument("--defense", default="none",
+                    choices=["none", "clip", "trimmed", "median"],
+                    help="screened robust aggregation "
+                         "(repro.core.aggregation): non-finite updates "
+                         "are always quarantined (and strike the "
+                         "sender's auction reputation), then 'clip' "
+                         "norm-clips to a running-median threshold, "
+                         "'trimmed'/'median' aggregate coordinate-wise; "
+                         "'none' is the undefended FedAvg baseline")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="snapshot server params + selection/defense "
+                         "state every N rounds (0 disables)")
+    ap.add_argument("--checkpoint-path", default=None, metavar="PATH",
+                    help="checkpoint file stem (.npz + .json manifest)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from --checkpoint-path if it exists "
+                         "(skips stage-1 clustering; dynamics-free runs "
+                         "continue bit-identically)")
     ap.add_argument("--no-warm-rerun", action="store_true",
                     help="selection mode: skip the second (warm) timing "
                          "run — rounds_per_s then includes compile time "
@@ -350,6 +394,12 @@ def main():
         obs.log(f"final acc={result['test_acc'][-1]:.3f} "
                 f"energy_std={result['energy_std'][-1]:.3f} "
                 f"wall={result['wall_s']:.0f}s", always=True)
+    if "defense" in result:
+        d = result["defense"]
+        obs.log(f"defense {d['defense']!r} vs attack {d['attack']!r}: "
+                f"adversaries={d['num_adversaries']} "
+                f"quarantined={d['num_quarantined']} "
+                f"banned={d['num_banned_final']}", always=True)
     obs.flush()
 
 

@@ -28,7 +28,7 @@ import sys
 from typing import Any, Dict, List, Optional
 
 KINDS = ("meta", "round", "span", "counter", "gauge", "jax_stats", "log",
-         "dynamics")
+         "dynamics", "defense")
 
 REQUIRED: Dict[str, tuple] = {
     "round": ("round", "test_acc", "test_loss", "energy_std", "mean_bid",
@@ -40,6 +40,9 @@ REQUIRED: Dict[str, tuple] = {
     # fleet-dynamics events (round/empty, buffer/fold) — see
     # repro.core.server and DESIGN.md §Fleet dynamics
     "dynamics": ("name",),
+    # defended-aggregation events (quarantine, round/diverged) — see
+    # repro.core.aggregation and DESIGN.md §Threat model
+    "defense": ("name",),
 }
 
 _EPS = 5e-3   # span clock tolerance (perf_counter rounding at 1e-6 + loop)
@@ -130,15 +133,29 @@ def validate_events(events: List[Dict[str, Any]],
             errs.append("no round/drain span in stream")
 
     # eval cadence (file sinks sanitize NaN -> null; the in-memory sink
-    # keeps the raw float — both spell "no eval this round")
+    # keeps the raw float — both spell "no eval this round").  Rows that
+    # carry the explicit ``eval_skipped`` flag are checked against it
+    # directly: a null/NaN acc with eval_skipped=false is a DIVERGED
+    # eval (the eval ran and came back non-finite), which is legal here
+    # — the inference "null means skipped" only holds for older logs
+    # that predate the flag.
     if rounds is not None and eval_every is not None:
         for r, e in sorted(round_rows.items()):
             due = eval_every <= 1 or r % eval_every == 0 \
                 or r == int(rounds) - 1
             acc = e.get("test_acc")
-            skipped = acc is None or (isinstance(acc, float) and acc != acc)
-            if due and (skipped or not _is_num(acc)):
-                errs.append(f"round {r}: eval due but test_acc={acc!r}")
+            null_acc = acc is None or (isinstance(acc, float) and acc != acc)
+            if "eval_skipped" in e:
+                skipped = bool(e["eval_skipped"])
+                if skipped and not null_acc:
+                    errs.append(f"round {r}: eval_skipped but "
+                                f"test_acc={acc!r}")
+                if due and skipped:
+                    errs.append(f"round {r}: eval due but skipped")
+            else:
+                skipped = null_acc
+                if due and (skipped or not _is_num(acc)):
+                    errs.append(f"round {r}: eval due but test_acc={acc!r}")
             if not due and not skipped:
                 errs.append(f"round {r}: eval off-cadence but "
                             f"test_acc={acc!r} (expected null)")

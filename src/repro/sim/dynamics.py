@@ -55,8 +55,15 @@ DROPPED = 3
 
 STRAGGLER_PROFILES = ("energy", "uniform", "lognormal", "none")
 
+# update-corruption attacks (repro.core.aggregation screens them)
+ATTACKS = ("none", "nan", "scale", "signflip", "noise")
+
 # fold_in tag separating the dynamics chain from the selection chain
 _DYN_STREAM_TAG = 0x5D7A11CE
+# fold_in tag for the adversary/corruption chain: its own stream, so
+# corruption composes with churn on OR off and neither ever perturbs
+# the selection chain (--adversary-frac 0 stays bit-identical)
+_ADV_STREAM_TAG = 0xAD5E11A7
 
 
 @dataclass
@@ -85,6 +92,69 @@ def init_dynamics(cfg: FLConfig) -> DynamicsState:
     """Round-0 dynamics state: everyone starts available (the churn
     process mixes toward its stationary split within a few rounds)."""
     return DynamicsState(avail=jnp.ones((cfg.num_clients,), bool))
+
+
+# ----------------------------------------------------------------------
+# Byzantine corruption model (per-winner update perturbation)
+# ----------------------------------------------------------------------
+
+def adversary_key(cfg: FLConfig) -> jnp.ndarray:
+    """Root of the DEDICATED adversary key stream (same construction as
+    :func:`dynamics_key`, different tag): membership and per-round
+    corruption draws are a pure function of the run seed, independent of
+    both the selection chain and the dynamics chain."""
+    return jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                              _ADV_STREAM_TAG)
+
+
+def adversary_mask(cfg: FLConfig) -> jnp.ndarray:
+    """(N,) bool — the run's fixed Byzantine set: exactly
+    ``round(adversary_frac * N)`` clients drawn once from the adversary
+    chain (a deterministic count, not per-client Bernoulli, so the
+    benchmark's 0/0.1/0.3 fractions mean what they say)."""
+    n = cfg.num_clients
+    m = int(round(cfg.adversary_frac * n))
+    if m <= 0:
+        return jnp.zeros((n,), bool)
+    perm = jax.random.permutation(jax.random.fold_in(adversary_key(cfg), 0),
+                                  n)
+    return jnp.zeros((n,), bool).at[perm[:m]].set(True)
+
+
+def corrupt_updates(cfg: FLConfig, key, deltas: jnp.ndarray,
+                    adv: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Perturb the adversarial rows of a (C, D) flat param-delta matrix
+    — the on-device, post-local-training corruption step.  Pure and
+    jittable (``cfg`` is static); honest and padding rows pass through
+    bit-unchanged.  Attacks (``cfg.attack``):
+
+      * ``nan``      — NaN-poison the whole row (caught by quarantine);
+      * ``scale``    — multiply by ``attack_scale`` (norm inflation —
+        finite, so it must be *clipped or trimmed*, not quarantined);
+      * ``signflip`` — multiply by ``-attack_scale`` (amplified
+        gradient-ascent direction);
+      * ``noise``    — add Gaussian noise with std ``attack_scale`` x
+        the cohort's honest RMS delta magnitude.
+    """
+    a = cfg.attack
+    if a == "none" or not cfg.adversary_enabled:
+        return deltas
+    hit = (adv & valid)[:, None]
+    if a == "nan":
+        return jnp.where(hit, jnp.float32(jnp.nan), deltas)
+    if a == "scale":
+        return jnp.where(hit, cfg.attack_scale * deltas, deltas)
+    if a == "signflip":
+        return jnp.where(hit, -cfg.attack_scale * deltas, deltas)
+    if a == "noise":
+        ok = valid[:, None]
+        denom = jnp.maximum(valid.sum() * deltas.shape[1], 1)
+        rms = jnp.sqrt(jnp.square(
+            jnp.where(ok, deltas, 0.0).astype(jnp.float32)).sum() / denom)
+        noise = (jax.random.normal(key, deltas.shape, deltas.dtype)
+                 * cfg.attack_scale * rms)
+        return jnp.where(hit, deltas + noise, deltas)
+    raise ValueError(f"unknown attack={a!r}; expected {ATTACKS}")
 
 
 # ----------------------------------------------------------------------

@@ -103,6 +103,11 @@ class CohortEngine:
         self._train_gather = self._build_train_gather()
         self._train_gather_sharded = (self._build_train_gather_sharded()
                                       if mesh is not None else None)
+        # per-client flat-delta twins for the defended aggregation path
+        # (repro.core.aggregation): built lazily — defense-off runs never
+        # construct them, so their jit caches can't perturb anything
+        self._train_updates = None
+        self._train_gather_updates = None
         self._weight_feats = jax.jit(self._build_weight_features())
         self._grad_feats = jax.jit(self._build_gradient_features())
 
@@ -213,6 +218,32 @@ class CohortEngine:
 
         return jax.jit(train, static_argnames="return_stacked")
 
+    def _flat_deltas(self, stacked, global_params) -> jnp.ndarray:
+        """(C, D) float32 flat param deltas from a stacked (leading-C)
+        per-client tree — leaf/concat order is jax.tree.leaves, matching
+        repro.core.aggregation's flatten/apply helpers."""
+        flats = jax.tree.map(
+            lambda s, g: (s.astype(jnp.float32) - g[None].astype(
+                jnp.float32)).reshape(s.shape[0], -1),
+            stacked, global_params)
+        return jnp.concatenate(jax.tree.leaves(flats), axis=1)
+
+    def _build_train_updates(self):
+        """Per-client flat-delta twin of ``_build_train`` for the
+        defended aggregation path: same local scans, but instead of the
+        fused FedAvg partial it returns the (C, D) update matrix the
+        screened aggregation consumes.  Single-device only — the
+        defended path's screening program is a single-device reduction
+        anyway (see DESIGN.md §Threat model)."""
+        core = self._build_train_core()
+
+        def train(global_params, xb, yb, mask):
+            stacked, _ = core(global_params, xb, yb, mask,
+                              jnp.zeros((xb.shape[0],), jnp.float32))
+            return self._flat_deltas(stacked, global_params)
+
+        return jax.jit(train)
+
     def _build_train_sharded(self):
         """The mesh-mapped twin of ``_build_train``: shard_map over the
         'data' axis, per-device chunked vmap/scan, FedAvg partial reduced
@@ -245,8 +276,9 @@ class CohortEngine:
         """Round-training body for the device-resident fleet path: take
         the winners' rows out of the class store, run the same chunked
         vmap/scan as the bucket path with per-step index gathers, and
-        fuse the f32 weighted FedAvg partial.  Returns the partial;
-        callers finish the reduction (astype, or psum + astype)."""
+        fuse the f32 weighted FedAvg partial.  Returns (stacked,
+        partial) — callers pick one (XLA drops the unfetched output) and
+        finish the reduction (astype, or psum + astype)."""
         cfg = self.cfg
         init, upd = sgd(cfg.lr, momentum=cfg.local_momentum)
         proximal = cfg.aggregator == "fedprox"
@@ -265,11 +297,12 @@ class CohortEngine:
 
             stacked = _client_map(one_client, (xg, yg, plans, mask),
                                   cfg.cohort_vmap_width)
-            return jax.tree.map(
+            partial = jax.tree.map(
                 lambda leaf: jnp.tensordot(weights,
                                            leaf.astype(jnp.float32),
                                            axes=1),
                 stacked)
+            return stacked, partial
 
         return core
 
@@ -278,10 +311,28 @@ class CohortEngine:
 
         def train(global_params, class_x, class_y, rows, plans, mask,
                   weights):
-            partial = core(global_params, class_x, class_y, rows, plans,
-                           mask, weights)
+            _, partial = core(global_params, class_x, class_y, rows,
+                              plans, mask, weights)
             return jax.tree.map(lambda p, g: p.astype(g.dtype),
                                 partial, global_params)
+
+        return jax.jit(train)
+
+    def _build_train_gather_updates(self):
+        """Per-client flat-delta twin of ``_build_train_gather`` for the
+        defended aggregation path: one compiled program per (class,
+        tier) shape — warmed alongside the aggregate programs by
+        DeviceRuntime.warmup when defenses are on, so the warm loop
+        still never retraces — returning the (C_cap, D) update matrix
+        (padding rows all-zero: masked scans are the identity, so a
+        padded row's params equal the globals)."""
+        core = self._build_train_gather_core()
+
+        def train(global_params, class_x, class_y, rows, plans, mask):
+            stacked, _ = core(global_params, class_x, class_y, rows,
+                              plans, mask,
+                              jnp.zeros((rows.shape[0],), jnp.float32))
+            return self._flat_deltas(stacked, global_params)
 
         return jax.jit(train)
 
@@ -299,8 +350,8 @@ class CohortEngine:
 
         def shard_body(global_params, class_x, class_y, rows, plans,
                        mask, weights):
-            partial = core(global_params, class_x, class_y, rows, plans,
-                           mask, weights)
+            _, partial = core(global_params, class_x, class_y, rows,
+                              plans, mask, weights)
             return jax.tree.map(
                 lambda p, g: jax.lax.psum(p, "data").astype(g.dtype),
                 partial, global_params)
@@ -369,6 +420,19 @@ class CohortEngine:
                 jnp.add, agg, part)
         return agg
 
+    def train_bucket_updates(self, global_params, bucket: CohortBucket
+                             ) -> jnp.ndarray:
+        """(C, D) float32 per-client flat deltas for one bucket — the
+        defended aggregation path's stage-3 output (padding rows are
+        all-zero; bucket.client_idx marks them -1).  Compiles per bucket
+        shape like ``train_bucket`` (the defended path adds no *warm*
+        retraces beyond the bucket shapes the plain path already pays)."""
+        if self._train_updates is None:
+            self._train_updates = self._build_train_updates()
+        self._note_shape(("bucket_upd", bucket.xb.shape))
+        return self._train_updates(global_params, bucket.xb, bucket.yb,
+                                   bucket.step_mask)
+
     def train_class(self, global_params, class_x, class_y, rows, plans,
                     step_mask, weights):
         """One capacity-class invocation of the device-resident round
@@ -383,6 +447,19 @@ class CohortEngine:
             else self._train_gather
         return step(global_params, class_x, class_y, rows, plans,
                     step_mask, weights)
+
+    def train_class_updates(self, global_params, class_x, class_y, rows,
+                            plans, step_mask) -> jnp.ndarray:
+        """(C_cap, D) float32 flat deltas for one capacity-class
+        invocation — the device runtime's defended-path twin of
+        :meth:`train_class`.  Always the single-device program (the
+        screened reduction downstream is single-device; the replicated
+        class store makes that correct on any mesh)."""
+        if self._train_gather_updates is None:
+            self._train_gather_updates = self._build_train_gather_updates()
+        self._note_shape(("class_upd", class_x.shape, plans.shape))
+        return self._train_gather_updates(global_params, class_x, class_y,
+                                          rows, plans, step_mask)
 
     def weight_features(self, global_params, buckets: List[CohortBucket],
                         num_clients: int) -> jnp.ndarray:

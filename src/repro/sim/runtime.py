@@ -38,6 +38,7 @@ import numpy as np
 from repro import obs
 from repro.configs.base import FLConfig
 from repro.core.adapters import ModelAdapter
+from repro.core.aggregation import UpdateBatch, make_flat_delta
 from repro.optim import apply_updates, fedprox_grad, sgd
 from repro.sim.cohort import (HostPlanCache, drop_zero_size_winners,
                               pack_cohort, pack_feature_pass)
@@ -72,6 +73,16 @@ class CohortRuntime(Protocol):
     def train_client(self, global_params, client_idx: int,
                      history_count: int) -> Any:
         """One client's local params after its local epochs."""
+        ...
+
+    def train_cohort_updates(self, global_params, sel_idx: np.ndarray,
+                             history: np.ndarray):
+        """Defended-path stage-3: the same local training, but instead
+        of the fused FedAvg aggregate return the cohort's per-client
+        flat param deltas as an UpdateBatch (repro.core.aggregation) —
+        (C, D) deltas + weights + client ids, padding rows all-zero with
+        id -1 — for the server's screened aggregation.  None for an
+        empty cohort."""
         ...
 
     def cluster_features(self, global_params, key,
@@ -148,6 +159,27 @@ class SequentialRuntime:
             pk = sizes / sizes.sum()
             return tree_weighted_sum(locals_, pk)
 
+    def train_cohort_updates(self, global_params, sel_idx, history):
+        history = np.asarray(history)
+        sel_idx = drop_zero_size_winners(sel_idx, self.clients)
+        if sel_idx.size == 0:
+            return None
+        if getattr(self, "_flat_delta", None) is None:
+            self._flat_delta = make_flat_delta(global_params)
+        with obs.span("cohort/train", runtime=self.name,
+                      cohort=int(sel_idx.size), defended=True):
+            rows = [self._flat_delta(
+                        self.train_client(global_params, int(i),
+                                          int(history[int(i)])),
+                        global_params)
+                    for i in sel_idx]
+            sizes = np.array([self.clients[int(i)].size for i in sel_idx],
+                             np.float64)
+            pk = sizes / sizes.sum()
+            return UpdateBatch(deltas=jnp.stack(rows),
+                               weights=pk.astype(np.float32),
+                               client_idx=np.asarray(sel_idx, np.int32))
+
     def cluster_features(self, global_params, key, feature_kind):
         return None   # use the reference loop in clustering.cluster_clients
 
@@ -186,6 +218,25 @@ class VectorizedRuntime(SequentialRuntime):
                       cohort=int(np.asarray(sel_idx).size)):
             return self.engine.train_cohort(global_params,
                                             self._pack(sel_idx, history))
+
+    def train_cohort_updates(self, global_params, sel_idx, history):
+        # the sharded runtime inherits this as-is: per-row deltas feed a
+        # single-device screened reduction, so the updates program always
+        # packs with client_multiple=1 and runs un-mesh-mapped (bucket
+        # shapes differ from the sharded fused path — each traces once)
+        buckets = self._pack(sel_idx, history)
+        if not buckets:
+            return None
+        with obs.span("cohort/train", runtime=self.name,
+                      cohort=int(np.asarray(sel_idx).size), defended=True):
+            deltas = [self.engine.train_bucket_updates(global_params, b)
+                      for b in buckets]
+            return UpdateBatch(
+                deltas=jnp.concatenate(deltas, axis=0),
+                weights=np.concatenate(
+                    [np.asarray(b.weights, np.float32) for b in buckets]),
+                client_idx=np.concatenate(
+                    [np.asarray(b.client_idx, np.int32) for b in buckets]))
 
     def cluster_features(self, global_params, key, feature_kind):
         with obs.span("cluster/features", feature=feature_kind,
@@ -294,8 +345,16 @@ class DeviceRuntime(VectorizedRuntime):
         with obs.span("fleet/warmup", classes=len(self.store.classes)):
             for b in self.store.warmup_batches():
                 c = self.store.classes[b.cls_id]
-                jax.block_until_ready(self.engine.train_class(
-                    global_params, *self._put_batch(b, c)))
+                staged = self._put_batch(b, c)
+                if self.cfg.defended:
+                    # defended rounds call the per-row updates program
+                    # instead of the fused one — warm that variant so the
+                    # screened path keeps the zero-warm-retrace guarantee
+                    jax.block_until_ready(self.engine.train_class_updates(
+                        global_params, *staged[:5]))
+                else:
+                    jax.block_until_ready(self.engine.train_class(
+                        global_params, *staged))
         self._warmed = True
 
     def _put_batch(self, b, c):
@@ -325,6 +384,29 @@ class DeviceRuntime(VectorizedRuntime):
                 agg = part if agg is None else jax.tree.map(jnp.add, agg,
                                                             part)
             return agg
+
+    def train_cohort_updates(self, global_params, sel_idx, history):
+        t0 = time.perf_counter()
+        with obs.span("cohort/assemble",
+                      winners=int(np.asarray(sel_idx).size)):
+            batches = self.store.assemble(sel_idx, np.asarray(history))
+        self.host_pack_s += time.perf_counter() - t0
+        if not batches:
+            return None
+        with obs.span("cohort/train", runtime=self.name,
+                      classes=len(batches), defended=True):
+            parts, ws, ids = [], [], []
+            for b in batches:
+                c = self.store.classes[b.cls_id]
+                parts.append(self.engine.train_class_updates(
+                    global_params, *self._put_batch(b, c)[:5]))
+                ws.append(np.asarray(b.weights, np.float32))
+                ids.append(np.asarray(b.client_idx, np.int32))
+            # padding rows ride along (all-zero delta, id -1, weight 0);
+            # the server compacts them out before the screened program
+            return UpdateBatch(deltas=jnp.concatenate(parts, axis=0),
+                               weights=np.concatenate(ws),
+                               client_idx=np.concatenate(ids))
 
 
 # ----------------------------------------------------------------------

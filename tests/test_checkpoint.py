@@ -1,0 +1,160 @@
+"""Checkpoint I/O (repro.checkpoint.io) + the server's crash/resume
+path: flattened-key collision guard, treedef-drift warning, roundtrip
+fidelity, and the bit-exact resume guarantee (a resumed dynamics-free
+run walks the remaining rounds identically to an uninterrupted one)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint import io as CKPT
+from repro.configs.base import FLConfig
+from repro.core.adapters import cnn_adapter
+from repro.core.server import FederatedServer
+from repro.data.partition import partition_clients
+from repro.data.synthetic import make_image_dataset
+
+N_CLIENTS = 10
+POOL = 700
+
+
+@pytest.fixture(autouse=True)
+def _obs_reset():
+    obs.OBS.reset()
+    yield
+    obs.OBS.reset()
+
+
+def _cfg(**kw):
+    base = dict(num_clients=N_CLIENTS, num_clusters=3, select_ratio=0.4,
+                rounds=4, local_epochs=1, sample_window=10,
+                cluster_resamples=2, init_energy_mode="normal", seed=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    train, test = make_image_dataset("mnist", n_train=POOL, n_test=120,
+                                     seed=3)
+    return train, test
+
+
+def _server(cfg, data):
+    train, test = data
+    clients = partition_clients(train.y, cfg, seed=3)
+    return FederatedServer(cfg, cnn_adapter("mnist"), train.x, train.y,
+                          clients, {"x": test.x[:64], "y": test.y[:64]})
+
+
+def _leaves(params):
+    return [np.asarray(x) for x in jax.tree.leaves(params)]
+
+
+# ----------------------------------------------------------------------
+# io-level guards
+# ----------------------------------------------------------------------
+
+def test_roundtrip_preserves_values_and_step(tmp_path):
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"inner": jnp.array([1, 2, 3], jnp.int32)}}
+    path = str(tmp_path / "ck")
+    CKPT.save(path, tree, step=7, extra={"note": 1})
+    out, step = CKPT.restore(path, tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    np.testing.assert_array_equal(np.asarray(out["b"]["inner"]),
+                                  np.asarray(tree["b"]["inner"]))
+    assert out["b"]["inner"].dtype == jnp.int32
+
+
+def test_duplicate_flattened_key_raises(tmp_path):
+    # dict nesting "a"/"b" and literal key "a/b" stringify to the same
+    # flat path — saving would silently drop one leaf
+    tree = {"a": {"b": np.zeros(2)}, "a/b": np.ones(2)}
+    with pytest.raises(ValueError, match="duplicate flattened"):
+        CKPT.save(str(tmp_path / "dup"), tree)
+
+
+def test_treedef_drift_warns_but_restores_by_key(tmp_path):
+    path = str(tmp_path / "drift")
+    CKPT.save(path, {"a": [np.arange(3.0)]})          # list container
+    like = {"a": (jnp.zeros(3),)}                     # same keys, tuple
+    with pytest.warns(UserWarning, match="treedef mismatch"):
+        out, _ = CKPT.restore(path, like)
+    np.testing.assert_array_equal(np.asarray(out["a"][0]),
+                                  np.arange(3.0))
+
+
+def test_key_set_mismatch_asserts(tmp_path):
+    path = str(tmp_path / "keys")
+    CKPT.save(path, {"a": np.zeros(2)})
+    with pytest.raises(AssertionError, match="keys mismatch"):
+        CKPT.restore(path, {"a": np.zeros(2), "b": np.zeros(2)})
+
+
+# ----------------------------------------------------------------------
+# server crash/resume
+# ----------------------------------------------------------------------
+
+def test_resume_is_bit_exact_vs_uninterrupted(data, tmp_path):
+    cfg = _cfg(rounds=4)
+    ref = _server(cfg, data)
+    logs_ref = ref.run(rounds=4)
+
+    # "crash" after round 2: checkpoint_every=2 saves at the t=1
+    # boundary; the run continues to round 2 and is then abandoned
+    path = str(tmp_path / "resume_ck")
+    crashed = _server(cfg, data)
+    crashed.run(rounds=3, checkpoint_every=2, checkpoint_path=path)
+
+    resumed = _server(cfg, data)
+    logs_res = resumed.run(rounds=4, checkpoint_path=path, resume=True)
+
+    # resumed run starts at round 2 and matches the uninterrupted run's
+    # tail bit-for-bit: params, selections, history, reward tally
+    assert [l.round for l in logs_res] == [2, 3]
+    for x, y in zip(_leaves(ref.params), _leaves(resumed.params)):
+        np.testing.assert_array_equal(x, y)
+    for lr_, lv in zip(logs_ref[2:], logs_res):
+        np.testing.assert_array_equal(lr_.selected, lv.selected)
+        assert lr_.mean_bid == lv.mean_bid
+        assert lr_.test_acc == pytest.approx(lv.test_acc, nan_ok=True)
+    np.testing.assert_array_equal(ref._host_history,
+                                  resumed._host_history)
+    assert ref.total_client_reward == pytest.approx(
+        resumed.total_client_reward)
+
+
+def test_resume_with_dynamics_and_defense_state(data, tmp_path):
+    # the harder tree: dynamics avail/key + host rng chain + defense
+    # clip_state/strikes must all survive the crash boundary
+    cfg = _cfg(rounds=4, churn=0.2, deadline=1.1, adversary_frac=0.3,
+               attack="nan", defense="median")
+    ref = _server(cfg, data)
+    ref.run(rounds=4)
+
+    path = str(tmp_path / "dyn_ck")
+    crashed = _server(cfg, data)
+    crashed.run(rounds=3, checkpoint_every=2, checkpoint_path=path)
+    resumed = _server(cfg, data)
+    resumed.run(rounds=4, checkpoint_path=path, resume=True)
+
+    for x, y in zip(_leaves(ref.params), _leaves(resumed.params)):
+        np.testing.assert_array_equal(x, y)
+    np.testing.assert_array_equal(
+        np.asarray(obs.device_get(ref.state.strikes)),
+        np.asarray(obs.device_get(resumed.state.strikes)))
+    np.testing.assert_array_equal(
+        np.asarray(obs.device_get(ref.dyn_state.avail)),
+        np.asarray(obs.device_get(resumed.dyn_state.avail)))
+
+
+def test_no_checkpoint_written_when_disabled(data, tmp_path):
+    path = str(tmp_path / "never")
+    srv = _server(_cfg(rounds=2), data)
+    srv.run(rounds=2, checkpoint_path=path)   # checkpoint_every=0
+    import os
+    assert not os.path.exists(path + ".npz")

@@ -244,3 +244,66 @@ def test_buffered_folds_and_schema_valid_log(data, tmp_path):
     assert folds and all(f["entries"] >= 1 for f in folds)
     errs = validate_events(load_jsonl(path), rounds=4, eval_every=1)
     assert errs == []
+
+
+# ----------------------------------------------------------------------
+# straggler-profile x aggregation-mode sweep (schema-valid, finite)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("profile", DYN.STRAGGLER_PROFILES)
+@pytest.mark.parametrize("aggregation", ("sync", "buffered"))
+def test_profile_aggregation_sweep_schema_valid(profile, aggregation,
+                                                data, tmp_path):
+    """Every latency profile composes with both aggregation modes: the
+    run completes, params stay finite, and the event log validates."""
+    path = str(tmp_path / "events.jsonl")
+    obs.configure(jsonl=path, memory=True)
+    cfg = _cfg(churn=0.2, deadline=0.9, rounds=3,
+               straggler_profile=profile, aggregation=aggregation,
+               buffer_goal=1)
+    srv = _server(cfg, data)
+    logs = srv.run()
+    assert len(logs) == 3
+    for leaf in _leaves(srv.params):
+        assert np.isfinite(leaf).all()
+    codes = np.concatenate(srv.outcome_log)
+    assert set(np.unique(codes)) <= {DYN.NOT_SELECTED, DYN.COMPLETED,
+                                     DYN.LATE, DYN.DROPPED}
+    assert validate_events(load_jsonl(path), rounds=3, eval_every=1) == []
+
+
+# ----------------------------------------------------------------------
+# property test: fault_step key-reuse determinism (hypothesis)
+# ----------------------------------------------------------------------
+
+def test_fault_step_key_reuse_is_deterministic_property():
+    """Property test (hypothesis, optional): fault_step is a pure
+    function of (cfg, key, fleet arrays) — calling it twice with the
+    same key yields bit-identical outcomes for arbitrary seeds, churn
+    rates, deadlines and fleet sizes.  This key-reuse determinism is
+    the property behind the buffered==sync oracle and the crash/resume
+    bit-exactness guarantee (tests/test_checkpoint.py)."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need the optional hypothesis extra")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           churn=st.floats(0.0, 0.5),
+           deadline=st.floats(0.1, 3.0),
+           n=st.integers(4, 24))
+    @settings(max_examples=20, deadline=None)
+    def run(seed, churn, deadline, n):
+        cfg = _cfg(num_clients=n, num_clusters=2, churn=churn,
+                   deadline=deadline)
+        win, avail, residual, sizes = _fleet_arrays(n)
+        key = jax.random.PRNGKey(seed)
+        a = DYN.fault_step(cfg, key, win, avail, residual, sizes)
+        b = DYN.fault_step(cfg, key, win, avail, residual, sizes)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        out = np.asarray(a[0])
+        assert (out[~np.asarray(win)] == DYN.NOT_SELECTED).all()
+
+    run()
