@@ -465,6 +465,92 @@ def bench_fleet_dynamics(quick: bool):
              overhead_p03=out["overhead_p0.3"])
 
 
+def bench_scheme_zoo(quick: bool):
+    """Scheme x Non-IID benchmark matrix over the pluggable round
+    control plane (repro.core.schemes): every registered selection
+    scheme runs the SAME fused round programs on the device runtime, so
+    the cells differ only in who gets selected.  Per cell: warm FL
+    rounds/sec (the scheme dispatch must not cost throughput — every
+    scheme compiles into the one lax.scan/step program), final test
+    accuracy (convergence), final residual-energy std (the paper's
+    energy-balance fairness, Fig 9/10) and the participation-history
+    std (selection fairness).  The long-term auction additionally
+    reports its budget ledger (total spend vs the Rg cap)."""
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.core.server import FederatedServer
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+
+    zoo = ("paper", "random", "fedcs", "longterm_auction")
+    nclients = 24 if quick else 50
+    warm_rounds, timed_rounds = (2, 4) if quick else (3, 8)
+    rounds = 6 if quick else 30
+    nus = (1.0,) if quick else (1.0, 0.5)
+    base = FLConfig(num_clients=nclients, num_clusters=4,
+                    select_ratio=0.25, local_epochs=1,
+                    scheme="gradient_cluster_auction",
+                    sample_window=20, cluster_resamples=2,
+                    init_energy_mode="normal", eval_every=10 ** 6,
+                    runtime="device", seed=0)
+    train, test = make_image_dataset("mnist", n_train=nclients * 125,
+                                     n_test=256, seed=0)
+    adapter = cnn_adapter("mnist")
+    out = {"clients": nclients, "rounds": rounds,
+           "warm_rounds": warm_rounds, "timed_rounds": timed_rounds,
+           "cells": {}}
+    for nu in nus:
+        for scheme in zoo:
+            cfg = base.replace(non_iid_level=nu, scheme_select=scheme)
+            clients = partition_clients(train.y, cfg, seed=0)
+            srv = FederatedServer(cfg, adapter, train.x, train.y, clients,
+                                  {"x": test.x[:256], "y": test.y[:256]})
+            srv.run(rounds=warm_rounds)
+            jax.block_until_ready(srv.params)
+            t0 = time.time()
+            for t in range(warm_rounds, warm_rounds + timed_rounds):
+                srv._dispatch_round(t, eval_now=False)
+            srv._flush_pending()
+            jax.block_until_ready(srv.params)
+            wall = time.time() - t0
+            for t in range(warm_rounds + timed_rounds, rounds):
+                srv._dispatch_round(t, eval_now=False)
+            srv._flush_pending()
+            acc, _ = jax.device_get(
+                srv._eval_step(srv.params, srv._test_dev))
+            hist = np.asarray(jax.device_get(srv.state.history))
+            row = {
+                "rounds_per_s": timed_rounds / wall,
+                "test_acc": float(acc),
+                "energy_std": float(srv.logs[-1].energy_std),
+                "fairness_hist_std": float(np.std(hist)),
+            }
+            if scheme == "longterm_auction":
+                ss = srv.state.scheme_state
+                row["budget_spent_total"] = float(
+                    jax.device_get(ss.spent))
+                row["budget_queue_final"] = float(
+                    jax.device_get(ss.queue))
+            out["cells"][f"{scheme}_nu{nu}"] = row
+            _row(f"scheme_zoo_{scheme}_nu{nu}",
+                 wall / timed_rounds * 1e6,
+                 f"rounds_per_s={row['rounds_per_s']:.2f} "
+                 f"acc={row['test_acc']:.3f} "
+                 f"energy_std={row['energy_std']:.3f} "
+                 f"fairness={row['fairness_hist_std']:.2f}")
+    _save("scheme_zoo", out)
+    c = out["cells"]
+    _summary("scheme_zoo", clients=nclients, rounds=rounds,
+             warm_rounds_per_s_paper=c["paper_nu1.0"]["rounds_per_s"],
+             **{f"acc_{s}": c[f"{s}_nu1.0"]["test_acc"] for s in zoo},
+             **{f"energy_std_{s}": c[f"{s}_nu1.0"]["energy_std"]
+                for s in zoo},
+             **{f"fairness_{s}": c[f"{s}_nu1.0"]["fairness_hist_std"]
+                for s in zoo},
+             budget_spent=c["longterm_auction_nu1.0"]
+             ["budget_spent_total"])
+
+
 def bench_robust_agg(quick: bool):
     """Byzantine robustness + defended-aggregation overhead: final test
     accuracy and warm FL rounds/sec across adversary fraction 0 / 0.1 /
@@ -686,6 +772,7 @@ BENCHES = {
     "round_pipeline": bench_round_pipeline,
     "fleet_dynamics": bench_fleet_dynamics,
     "robust_agg": bench_robust_agg,
+    "scheme_zoo": bench_scheme_zoo,
     "fig3": bench_virtual_dataset,
     "fig4": bench_fig4,
     "fig5": bench_fig5,

@@ -316,6 +316,23 @@ class FLConfig:
     # gradient_cluster_auction | gradient_cluster_random |
     # weights_cluster_random  | random
 
+    # control-plane selection scheme (repro.core.schemes registry):
+    # which per-round winner-pick program the fused round control plane
+    # compiles.  'paper' routes through selection.select_round exactly
+    # as before (itself dispatching on cfg.scheme above — the paper's
+    # own four baselines), so the default stays bit-identical to the
+    # pre-registry traces; the competitors are 'random' (uniform
+    # per-cluster, availability-aware), 'fedcs' (deadline-feasibility
+    # gating on predicted latency at bid time, arXiv:1804.08333) and
+    # 'longterm_auction' (inter-round budget/payment state threaded as
+    # SelectionState.scheme_state, arXiv:2508.09181).
+    scheme_select: str = "paper"
+    # fedcs: predicted-latency feasibility bound (in fleet-mean round
+    # times, same units as cfg.deadline) used at bid time when
+    # cfg.deadline == 0; a positive cfg.deadline takes precedence so the
+    # auction gates on the same deadline the fault model enforces
+    fedcs_deadline: float = 1.5
+
     # cohort execution backend (repro.sim): 'sequential' runs the
     # reference per-client loop; 'vectorized' runs whole cohorts as one
     # compiled vmap/scan program per size bucket; 'sharded' additionally

@@ -92,6 +92,27 @@ def revenue(bid: jnp.ndarray, c: jnp.ndarray,
     return jnp.where(won, bid - c, 0.0)
 
 
+def price_round(clusters: jnp.ndarray, residual: jnp.ndarray,
+                local_sizes: jnp.ndarray, history: jnp.ndarray,
+                k_j: int, cfg: FLConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The PRICING half of one auction round: per-client cost (eq 14)
+    and symmetric Nash bids (Theorem 2) under the current cluster sizes.
+    Returns ``(cost, bids)``.
+
+    Split out of selection.select_round so selection schemes
+    (repro.core.schemes) compose pricing with their own winner-pick and
+    eligibility rules — fedcs reprices then gates on predicted latency,
+    the long-term auction reprices then gates on its budget ledger.  The
+    op sequence is exactly the one select_round inlined, so the paper
+    scheme's traces are unchanged."""
+    nj = jnp.zeros((cfg.num_clusters,), jnp.float32).at[clusters].add(1.0)
+    n_of = nj[clusters]                       # N_j per client
+    c = cost(residual, local_sizes, history, cfg)
+    bids = optimal_bid(c, n_of, float(k_j))
+    return c, bids
+
+
 # ----------------------------------------------------------------------
 # winner selection
 # ----------------------------------------------------------------------

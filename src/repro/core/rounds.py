@@ -42,6 +42,7 @@ from repro import obs
 from repro.configs.base import FLConfig
 from repro.core import auction as A
 from repro.core import energy as E
+from repro.core import schemes as SCH
 from repro.core import selection as SEL
 from repro.core.virtual_dataset import virtual_dataset_gap_device
 
@@ -72,17 +73,21 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
     ``avail`` is the fleet-dynamics availability mask (None = every
     dynamics-free trace is unchanged)."""
     obs.jax_stats.note_trace("round_step")   # fires at (re)trace time only
+    scheme = SCH.get_scheme(cfg.scheme_select)
     if state.strikes is not None:
         # auction reputation: quarantine repeat offenders (strikes at or
         # above the ban threshold) lose eligibility exactly like offline
         # clients — the pure 'random' baseline stays blind, same as avail
         trust = state.strikes < cfg.strike_threshold
         avail = trust if avail is None else (avail & trust)
-    win, info = SEL.select_round(state, cfg, key, winners_impl=winners_impl,
-                                 avail=avail)
+    win, info = scheme.select(state, cfg, key, winners_impl=winners_impl,
+                              avail=avail)
     bids = info["bids"]
     client_r, server_r = round_rewards(win, bids, state.local_sizes, cfg)
     new_state = SEL.update_after_round(state, win, cfg)
+    scheme_state, scheme_metrics = scheme.update_state(
+        state, new_state, cfg, win, info, client_r)
+    new_state = dataclasses.replace(new_state, scheme_state=scheme_state)
 
     nwin = win.sum()
     winning_bids = jnp.where(win, bids, 0.0)
@@ -95,8 +100,14 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
         "s_min": jnp.asarray(info.get("s_min", 0), jnp.int32),
         "vds_gap": (virtual_dataset_gap_device(win, count_hists, global_hist)
                     if count_hists is not None else jnp.float32(0.0)),
+        # selection fairness across the zoo: dispersion of cumulative
+        # participation counts (0 = perfectly even) — comparable between
+        # schemes because every scheme shares the same history update
+        "fairness_hist_std": jnp.std(
+            new_state.history.astype(jnp.float32)),
     }
     metrics.update(E.energy_stats(new_state.residual))
+    metrics.update(scheme_metrics)
     if state.strikes is not None:
         metrics["num_banned"] = (
             state.strikes >= cfg.strike_threshold).sum()
@@ -282,4 +293,5 @@ def synthetic_fleet(cfg: FLConfig, key, size_low: int = 100,
         history=jnp.zeros((n,), jnp.int32),
         local_sizes=jax.random.randint(k_sz, (n,), size_low, size_high + 1,
                                        jnp.int32),
+        scheme_state=SCH.init_scheme_state(cfg),
     )

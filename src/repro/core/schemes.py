@@ -1,0 +1,373 @@
+"""Selection-scheme registry: pluggable per-round winner-pick programs
+for the fused round control plane (repro.core.rounds).
+
+The paper's cluster-then-auction selection was hardcoded into
+``rounds._round_body``; this registry makes the control plane a scheme
+x distribution benchmark matrix instead.  Every scheme is a
+:class:`SelectionScheme` — three jittable hooks plus an optional carried
+state — and every registered scheme compiles into the SAME round
+programs: the live jitted step (``rounds.make_round_step``), the
+``lax.scan``-over-rounds fast path (``rounds.simulate_rounds``, N=1M
+clients x thousands of rounds) and the seed per-round reference, with
+zero warm retraces (counter-asserted in tests/test_schemes.py).
+
+Interface contract (DESIGN.md §Scheme registry):
+
+  * ``init_state(cfg) -> Optional[pytree]`` — the scheme's carried
+    state, threaded as ``SelectionState.scheme_state`` across rounds
+    (through jit, scan and checkpoints).  ``None`` for stateless
+    schemes: a None field is an empty pytree node, so stateless schemes
+    trace the exact pre-registry round programs (the Optional-last-field
+    pattern proven by ``staleness`` and ``strikes``).
+  * ``select(state, cfg, key, winners_impl, avail) -> (win, info)`` —
+    the eligibility/bid transform + winner pick.  ``avail`` is the
+    conjunction of fleet-dynamics availability and auction-reputation
+    trust (strikes below threshold), composed UPSTREAM in
+    ``rounds._round_body`` — schemes must treat it as a hard eligibility
+    mask.  ``info`` must contain ``bids`` (the reward models read it).
+  * ``update_state(state, new_state, cfg, win, info, client_rewards)
+    -> (new_scheme_state, metrics)`` — advance the carried state after
+    the energy/history update and emit per-scheme round scalars (device
+    values; drained with the round's one batched fetch).
+
+Built-in zoo:
+
+  * ``paper``            — the oracle: selection.select_round verbatim
+    (itself dispatching on ``cfg.scheme``, the paper's own baselines).
+  * ``random``           — uniform K_j per-cluster picks among available
+    clients (the paper's baseline, made availability/reputation-aware).
+  * ``fedcs``            — FedCS deadline-constrained selection (Nishio
+    & Yonetani, arXiv:1804.08333): the paper's pricing, but bid-time
+    eligibility additionally requires the sim.dynamics latency model's
+    PREDICTED round latency to meet the deadline — the auction finally
+    sees deadline risk instead of discovering it post-hoc.
+  * ``longterm_auction`` — long-term budget-feasible auction
+    (arXiv:2508.09181): a Lyapunov virtual queue tracks cumulative
+    overspend vs the per-round budget Rg/Nr; the backlog adaptively caps
+    admissible bids so the time-average payout meets the budget, and the
+    whole ledger (spent, queue, per-client payments) rides
+    ``scheme_state``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import auction as A
+from repro.core import selection as SEL
+
+Metrics = Dict[str, jnp.ndarray]
+SelectFn = Callable[..., Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]]
+
+
+@dataclass(frozen=True)
+class SelectionScheme:
+    """One pluggable selection scheme (see module docstring for the
+    hook contract).  Frozen: schemes are registered once at import and
+    shared across configs — all per-run knobs come from ``cfg``."""
+
+    name: str
+    select: SelectFn
+    init_state: Callable[[FLConfig], Optional[Any]]
+    update_state: Callable[..., Tuple[Optional[Any], Metrics]]
+    # True when init_state returns a non-None pytree: the obs schema
+    # validator requires such schemes to log budget scalars every round
+    stateful: bool = False
+
+
+_REGISTRY: Dict[str, SelectionScheme] = {}
+
+
+def register(scheme: SelectionScheme) -> SelectionScheme:
+    if scheme.name in _REGISTRY:
+        raise ValueError(f"scheme {scheme.name!r} already registered")
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def get_scheme(name: str) -> SelectionScheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown selection scheme {name!r}; registered schemes: "
+            f"{scheme_names()}") from None
+
+
+def scheme_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def stateful_scheme_names() -> Tuple[str, ...]:
+    """Schemes that thread a scheme_state pytree (the obs schema
+    validator's STATEFUL_SCHEMES must mirror this — cross-checked by
+    tests/test_schemes.py so the two can't drift)."""
+    return tuple(sorted(n for n, s in _REGISTRY.items() if s.stateful))
+
+
+def init_scheme_state(cfg: FLConfig) -> Optional[Any]:
+    """The scheme_state for a fresh fleet under ``cfg.scheme_select``."""
+    return get_scheme(cfg.scheme_select).init_state(cfg)
+
+
+# ----------------------------------------------------------------------
+# stateless no-op hooks
+# ----------------------------------------------------------------------
+
+def _no_state(cfg: FLConfig) -> None:
+    return None
+
+
+def _keep_state(state, new_state, cfg, win, info, client_rewards
+                ) -> Tuple[Optional[Any], Metrics]:
+    return state.scheme_state, {}
+
+
+# ----------------------------------------------------------------------
+# paper — the oracle (selection.select_round verbatim)
+# ----------------------------------------------------------------------
+
+register(SelectionScheme(
+    name="paper",
+    select=SEL.select_round,
+    init_state=_no_state,
+    update_state=_keep_state,
+))
+
+
+# ----------------------------------------------------------------------
+# random — uniform per-cluster picks, availability/reputation-aware
+# ----------------------------------------------------------------------
+
+def random_select(state: SEL.SelectionState, cfg: FLConfig, key,
+                  winners_impl: str = "segmented",
+                  avail: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Uniform K_j picks per cluster among ELIGIBLE clients only.
+
+    Same 4-way key split as select_round (keys[1] drives the pick — the
+    chain discipline the reference-sampler regression pins down), and
+    the pick is the segmented sampler selection._random_per_cluster,
+    whose per-cluster argsort loop survives as the oracle.  Unlike the
+    legacy ``cfg.scheme == "random"`` baseline (which models a server
+    with no liveness signal and draws blind), ``avail`` here is a hard
+    mask: the sampler's empty-cluster relaxation never re-admits an
+    offline or reputation-banned client — the post-pick conjunction
+    keeps a fully-gated cluster empty instead."""
+    n = cfg.num_clients
+    keys = jax.random.split(key, 4)
+    eligible = (jnp.ones((n,), bool) if avail is None else avail)
+    win = SEL._random_per_cluster(keys[1], state, cfg, eligible) & eligible
+    return win, {"bids": jnp.zeros((n,))}
+
+
+register(SelectionScheme(
+    name="random",
+    select=random_select,
+    init_state=_no_state,
+    update_state=_keep_state,
+))
+
+
+# ----------------------------------------------------------------------
+# fedcs — deadline-feasibility gating on predicted latency at bid time
+# ----------------------------------------------------------------------
+
+# fold_in tag separating the bid-time latency-prediction draw from every
+# other consumer of the round key (the fault model's ACTUAL latency draw
+# comes from the dedicated dynamics chain, so prediction stays a model
+# of the hazard, not an oracle over it)
+_FEDCS_PRED_TAG = 0xFEDC5
+
+
+def fedcs_deadline(cfg: FLConfig) -> float:
+    """The deadline fedcs gates on: the fault model's ``cfg.deadline``
+    when dynamics enforce one, else the scheme's own bound — so with
+    dynamics on, the auction predicts the exact hazard the fleet runs
+    under."""
+    return cfg.deadline if cfg.deadline > 0.0 else cfg.fedcs_deadline
+
+
+def fedcs_predicted_latency(state: SEL.SelectionState, cfg: FLConfig,
+                            key) -> jnp.ndarray:
+    """Bid-time per-client latency prediction: the sim.dynamics latency
+    model (compute scales with local sample count x the straggler
+    profile's energy-dependent slowdown) evaluated on the round-start
+    state under a dedicated fold of the round key.  Deterministic given
+    (key, state) — tests recompute it to assert feasibility."""
+    from repro.sim import dynamics as DYN
+    return DYN.round_latency(cfg, jax.random.fold_in(key, _FEDCS_PRED_TAG),
+                             state.residual, state.local_sizes)
+
+
+def fedcs_select(state: SEL.SelectionState, cfg: FLConfig, key,
+                 winners_impl: str = "segmented",
+                 avail: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """FedCS-style deadline-constrained selection: the paper's pricing
+    (cost -> Nash bids -> s_min probe), but a client whose PREDICTED
+    latency misses the deadline cannot enter the auction — closing the
+    PR-7 follow-on where selection was blind to the deadline the fault
+    model then enforced.  A cluster with no feasible member selects no
+    one (never relaxed: an infeasible winner would just be LATE)."""
+    kj = SEL.k_per_cluster(cfg)
+    keys = jax.random.split(key, 4)
+    c, bids = A.price_round(state.clusters, state.residual,
+                            state.local_sizes, state.history, kj, cfg)
+    smin = SEL._sample_threshold(keys[0], state, cfg, bids)
+    pred_lat = fedcs_predicted_latency(state, cfg, key)
+    feasible = pred_lat <= fedcs_deadline(cfg)
+    eligible = (state.local_sizes >= smin) & (c < A.INF) & feasible
+    if avail is not None:
+        eligible = eligible & avail
+    cs = A.service_cost(state.local_sizes, state.history, cfg)
+    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+                            cfg.num_clusters, tie_break=cs,
+                            impl=winners_impl)
+    return win, {"bids": bids, "costs": c, "s_min": smin,
+                 "pred_latency": pred_lat,
+                 "revenue": A.revenue(bids, c, win)}
+
+
+def _fedcs_update(state, new_state, cfg, win, info, client_rewards
+                  ) -> Tuple[Optional[Any], Metrics]:
+    nwin = jnp.maximum(win.sum(), 1)
+    return None, {
+        "pred_latency_mean": jnp.where(win, info["pred_latency"],
+                                       0.0).sum() / nwin,
+        "num_feasible": (info["pred_latency"]
+                         <= fedcs_deadline(cfg)).sum(),
+    }
+
+
+register(SelectionScheme(
+    name="fedcs",
+    select=fedcs_select,
+    init_state=_no_state,
+    update_state=_fedcs_update,
+))
+
+
+# ----------------------------------------------------------------------
+# longterm_auction — budget/payment state carried across rounds
+# ----------------------------------------------------------------------
+
+@dataclass
+class LongTermState:
+    """The long-term auction's carried ledger (a pytree — flows through
+    jit/scan/checkpoints as ``SelectionState.scheme_state``)."""
+
+    spent: jnp.ndarray    # () f32 cumulative payout over the whole run
+    queue: jnp.ndarray    # () f32 Lyapunov backlog vs the per-round budget
+    paid: jnp.ndarray     # (N,) f32 cumulative per-client payments
+
+
+jax.tree_util.register_dataclass(
+    LongTermState, data_fields=["spent", "queue", "paid"], meta_fields=[])
+
+
+def _longterm_init(cfg: FLConfig) -> LongTermState:
+    return LongTermState(
+        spent=jnp.float32(0.0), queue=jnp.float32(0.0),
+        paid=jnp.zeros((cfg.num_clients,), jnp.float32))
+
+
+def longterm_bid_cap(cfg: FLConfig, queue) -> jnp.ndarray:
+    """Backlog-adaptive admissible-bid cap: 1 (no-op) at zero backlog,
+    shrinking as the virtual queue grows — only ever-cheaper clients can
+    win until the time-average payout falls back under the per-round
+    budget (the drift-plus-penalty knob of the long-term auction)."""
+    per_round = cfg.total_reward / cfg.target_rounds
+    return 1.0 / (1.0 + queue / per_round)
+
+
+def longterm_select(state: SEL.SelectionState, cfg: FLConfig, key,
+                    winners_impl: str = "segmented",
+                    avail: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Long-term budget-feasible auction: the paper's per-cluster
+    reverse auction, gated by the carried ledger — (a) a run whose
+    cumulative payout has exhausted the total budget Rg selects no one,
+    ever (hard long-term constraint); (b) the Lyapunov backlog caps the
+    admissible bid, throttling rich rounds so the time-average payout
+    converges to Rg/Nr."""
+    ss = state.scheme_state
+    if ss is None:
+        raise ValueError(
+            "scheme_select='longterm_auction' needs scheme_state — build "
+            "states via rounds.synthetic_fleet / FederatedServer, or set "
+            "state.scheme_state = schemes.init_scheme_state(cfg)")
+    kj = SEL.k_per_cluster(cfg)
+    keys = jax.random.split(key, 4)
+    c, bids = A.price_round(state.clusters, state.residual,
+                            state.local_sizes, state.history, kj, cfg)
+    smin = SEL._sample_threshold(keys[0], state, cfg, bids)
+    remaining = cfg.total_reward - ss.spent
+    cap = longterm_bid_cap(cfg, ss.queue)
+    eligible = ((state.local_sizes >= smin) & (c < A.INF)
+                & (bids <= cap) & (remaining > 0.0))
+    if avail is not None:
+        eligible = eligible & avail
+    cs = A.service_cost(state.local_sizes, state.history, cfg)
+    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+                            cfg.num_clusters, tie_break=cs,
+                            impl=winners_impl)
+    return win, {"bids": bids, "costs": c, "s_min": smin,
+                 "revenue": A.revenue(bids, c, win)}
+
+
+def _longterm_update(state, new_state, cfg, win, info, client_rewards
+                     ) -> Tuple[LongTermState, Metrics]:
+    """Advance the ledger by this round's ACTUAL payout (the reward
+    model's per-client payments): spent is monotone non-decreasing, the
+    virtual queue is max(q + spend - Rg/Nr, 0) — the standard Lyapunov
+    update whose stability is exactly 'time-average spend <= budget'."""
+    ss = state.scheme_state
+    per_round = cfg.total_reward / cfg.target_rounds
+    spend = client_rewards.sum()
+    new_ss = LongTermState(
+        spent=ss.spent + spend,
+        queue=jnp.maximum(ss.queue + spend - per_round, 0.0),
+        paid=ss.paid + client_rewards)
+    return new_ss, {
+        "budget_spent": spend,
+        "budget_remaining": cfg.total_reward - new_ss.spent,
+        "budget_queue": new_ss.queue,
+    }
+
+
+register(SelectionScheme(
+    name="longterm_auction",
+    select=longterm_select,
+    init_state=_longterm_init,
+    update_state=_longterm_update,
+    stateful=True,
+))
+
+
+# ----------------------------------------------------------------------
+# host-side hooks (server dynamics plumbing)
+# ----------------------------------------------------------------------
+
+def host_replacement_mask(cfg: FLConfig, host_sizes: np.ndarray
+                          ) -> Optional[np.ndarray]:
+    """Scheme-aware filter for the server's retry-or-replace candidate
+    pool (server._resample_dropped): fedcs substitutes must themselves
+    be plausibly deadline-feasible, or the replacement just converts a
+    DROPPED slot into a LATE one.  Host-side and deterministic (the
+    optimistic bound uses the latency model's size-driven compute term
+    at the fastest straggler factor), so replacement draws stay a pure
+    function of (seed, outcome stream).  None = no scheme constraint."""
+    if cfg.scheme_select != "fedcs":
+        return None
+    sizes = host_sizes.astype(np.float64)
+    compute = sizes / max(sizes.mean(), 1.0)
+    # fastest profile factor: 1.0 base x the 0.9 jitter floor (energy),
+    # 0.5 (uniform); 'lognormal'/'none' can reach ~0 slowdown -> 1.0x
+    floor = {"energy": 0.9, "uniform": 0.5}.get(cfg.straggler_profile, 0.0)
+    return compute * floor + 0.05 <= fedcs_deadline(cfg)

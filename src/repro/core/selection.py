@@ -48,12 +48,20 @@ class SelectionState:
     # update; a client at >= cfg.strike_threshold strikes loses auction
     # eligibility until per-round decay (update_after_round) re-admits it.
     strikes: Optional[jnp.ndarray] = None
+    # per-scheme carried state (repro.core.schemes), or None for
+    # stateless schemes — the third instance of the Optional-last-field
+    # pattern: a None scheme_state is an empty pytree node, so every
+    # scheme that doesn't thread state (paper, random, fedcs) traces the
+    # exact pre-registry round programs.  The long-term auction carries
+    # its budget/payment ledger here so it flows through jit / lax.scan
+    # / checkpoints with the rest of the state.
+    scheme_state: Optional[object] = None
 
 
 jax.tree_util.register_dataclass(
     SelectionState,
     data_fields=["clusters", "residual", "history", "local_sizes",
-                 "staleness", "strikes"],
+                 "staleness", "strikes", "scheme_state"],
     meta_fields=[])
 
 
@@ -164,11 +172,9 @@ def select_round(state: SelectionState, cfg: FLConfig, key,
         return win, info
 
     # ---- gradient_cluster_auction (the paper's scheme) ----
-    nj = jnp.zeros((cfg.num_clusters,), jnp.float32).at[state.clusters].add(1.0)
-    n_of = nj[state.clusters]                       # N_j per client
     kj = k_per_cluster(cfg)
-    c = A.cost(state.residual, state.local_sizes, state.history, cfg)
-    bids = A.optimal_bid(c, n_of, float(kj))
+    c, bids = A.price_round(state.clusters, state.residual,
+                            state.local_sizes, state.history, kj, cfg)
     # step 1: probe cluster js fixes the sample threshold
     smin = _sample_threshold(keys[0], state, cfg, bids)
     eligible = (state.local_sizes >= smin) & (c < A.INF)

@@ -61,6 +61,7 @@ from repro.core import aggregation as AGG
 from repro.core import clustering as CL
 from repro.core import energy as EN
 from repro.core import rounds as RND
+from repro.core import schemes as SCH
 from repro.core import selection as SEL
 from repro.core.adapters import ModelAdapter
 from repro.optim import apply_updates, sgd
@@ -128,6 +129,14 @@ _DYN_METRIC_KEYS = ("num_completed", "num_late", "num_dropped",
 # emits num_banned only when SelectionState carries strikes)
 _DEF_METRIC_KEYS = ("num_banned",)
 
+# device metric keys the selection-scheme zoo adds: fairness_hist_std
+# comes from every scheme; the budget_* ledger scalars only from
+# scheme_state-bearing schemes (longterm_auction), the latency ones only
+# from fedcs — all drained with the same batched fetch
+_SCHEME_METRIC_KEYS = ("fairness_hist_std", "budget_spent",
+                       "budget_remaining", "budget_queue",
+                       "pred_latency_mean", "num_feasible")
+
 
 class FederatedServer:
     def __init__(self, cfg: FLConfig, adapter: ModelAdapter,
@@ -160,6 +169,9 @@ class FederatedServer:
             # same rule for the reputation ledger with defenses off
             strikes=(jnp.zeros((cfg.num_clients,), jnp.float32)
                      if self.defended else None),
+            # per-scheme carried state (None for stateless schemes —
+            # same Optional-last-field rule as staleness/strikes)
+            scheme_state=SCH.init_scheme_state(cfg),
         )
         from repro.core.virtual_dataset import client_count_histograms
         from repro.data.partition import global_histogram
@@ -190,6 +202,12 @@ class FederatedServer:
             # identical across cohort runtimes
             self._dyn_rng = np.random.default_rng(
                 np.uint32(cfg.seed) + 0x5D7A)
+            # scheme-aware replacement constraint (fedcs: substitutes
+            # must themselves be plausibly deadline-feasible); None from
+            # the registry means unconstrained
+            m = SCH.host_replacement_mask(cfg, self._host_sizes)
+            self._host_feasible = (np.ones((cfg.num_clients,), bool)
+                                   if m is None else np.asarray(m, bool))
             self.outcome_log: List[np.ndarray] = []   # per-round winner codes
             self._late_buffer: List[_BufferedUpdate] = []
             self._delta_step = jax.jit(
@@ -290,7 +308,8 @@ class FederatedServer:
         self.state = SEL.SelectionState(
             clusters=labels.astype(jnp.int32), residual=self.state.residual,
             history=self.state.history, local_sizes=self.state.local_sizes,
-            staleness=self.state.staleness, strikes=self.state.strikes)
+            staleness=self.state.staleness, strikes=self.state.strikes,
+            scheme_state=self.state.scheme_state)
         if self.dynamics:
             self._host_clusters = np.asarray(obs.device_get(labels),
                                              np.int64)
@@ -421,13 +440,18 @@ class FederatedServer:
         with local data (an empty candidate pool forfeits the slot).
         Draws come from the dedicated host dynamics rng, so replacement
         picks are a pure function of (seed, outcome stream) — identical
-        across cohort runtimes."""
+        across cohort runtimes.  Under ``--scheme-select fedcs`` the
+        candidate pool is further restricted to plausibly
+        deadline-feasible clients (schemes.host_replacement_mask) — a
+        substitute that can't meet the deadline would just convert the
+        DROPPED slot into a LATE one."""
         chosen: List[int] = []
         taken = win_np.copy()
         for gid in dropped:
             cand = np.nonzero(
                 (self._host_clusters == self._host_clusters[int(gid)])
-                & self._host_avail & ~taken & (self._host_sizes > 0))[0]
+                & self._host_avail & ~taken & (self._host_sizes > 0)
+                & self._host_feasible)[0]
             if cand.size == 0:
                 continue
             pick = int(cand[self._dyn_rng.integers(cand.size)])
@@ -595,7 +619,8 @@ class FederatedServer:
             # per-round series row: every scalar is already a host float
             # from the batched fetch above — recording adds no sync
             extra: Dict[str, float] = {}
-            for k in _DYN_METRIC_KEYS + _DEF_METRIC_KEYS:
+            for k in (_DYN_METRIC_KEYS + _DEF_METRIC_KEYS
+                      + _SCHEME_METRIC_KEYS):
                 if k in m:
                     extra[k] = float(m[k])
             if p.dyn is not None:
@@ -653,7 +678,12 @@ class FederatedServer:
         host-side rng state and reward tally ride the json manifest."""
         from repro.checkpoint import io as CKPT
         extra: Dict[str, Any] = {
-            "total_client_reward": self.total_client_reward}
+            "total_client_reward": self.total_client_reward,
+            # the active selection scheme rides the manifest so a resume
+            # under a different --scheme-select fails loudly instead of
+            # silently diverging (the restored scheme_state pytree and
+            # the key-consumption pattern are both scheme-shaped)
+            "scheme_select": self.cfg.scheme_select}
         if self.dynamics:
             # the replacement sampler's host rng state is json-friendly
             # (PCG64 state dict of ints) — resumed draws continue the
@@ -666,8 +696,26 @@ class FederatedServer:
         """Restore a :meth:`save_checkpoint` snapshot and return the next
         round index.  Stage-1 clustering must NOT be re-run afterwards:
         the restored key already reflects its chain consumption and the
-        cluster ids live in the restored SelectionState."""
+        cluster ids live in the restored SelectionState.
+
+        Raises ValueError when the snapshot's manifest records a
+        different selection scheme than this server's
+        ``cfg.scheme_select``: the checkpointed scheme_state pytree and
+        key chain are scheme-shaped, so continuing under another scheme
+        would silently diverge (or crash deep inside restore with a
+        structure mismatch) — the manifest is checked FIRST."""
         from repro.checkpoint import io as CKPT
+        manifest0 = path.removesuffix(".npz") + ".json"
+        if os.path.exists(manifest0):
+            with open(manifest0) as f:
+                saved = (json.load(f).get("extra") or {}).get(
+                    "scheme_select", "paper")
+            if saved != self.cfg.scheme_select:
+                raise ValueError(
+                    f"checkpoint {path!r} was written by selection scheme "
+                    f"{saved!r} but this run uses --scheme-select "
+                    f"{self.cfg.scheme_select!r}; resume with "
+                    f"--scheme-select {saved} or start a fresh run")
         tree, step = CKPT.restore(path, self._ckpt_tree())
         self.params = tree["params"]
         self.state = tree["state"]

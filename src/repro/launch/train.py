@@ -91,6 +91,8 @@ def run_paper(args) -> dict:
         select_ratio=args.select_ratio, rounds=args.rounds,
         local_epochs=args.local_epochs, lr=args.lr,
         non_iid_level=args.nu, scheme=args.scheme,
+        scheme_select=args.scheme_select,
+        fedcs_deadline=args.fedcs_deadline,
         aggregator=args.aggregator, init_energy_mode=args.energy_mode,
         runtime=args.runtime, cohort_mesh_devices=args.cohort_devices,
         eval_every=args.eval_every, seed=args.seed,
@@ -114,7 +116,8 @@ def run_paper(args) -> dict:
                    checkpoint_path=args.checkpoint_path,
                    resume=args.resume)
     out = {
-        "mode": "paper", "scheme": args.scheme, "nu": args.nu,
+        "mode": "paper", "scheme": args.scheme,
+        "scheme_select": args.scheme_select, "nu": args.nu,
         "aggregator": args.aggregator, "dataset": args.dataset,
         "runtime": args.runtime,
         "rounds": [l.round for l in logs],
@@ -156,6 +159,8 @@ def run_transformer(args) -> dict:
         num_clients=max(10, args.clients // 5), num_clusters=5,
         select_ratio=0.2, rounds=args.rounds, lr=args.lr,
         non_iid_level=args.nu, scheme=args.scheme, num_classes=10,
+        scheme_select=args.scheme_select,
+        fedcs_deadline=args.fedcs_deadline,
         sample_window=8, cluster_resamples=2, runtime=args.runtime,
         cohort_mesh_devices=args.cohort_devices,
         eval_every=args.eval_every, seed=args.seed,
@@ -175,7 +180,7 @@ def run_transformer(args) -> dict:
     logs = srv.run(verbose=not args.quiet, audit_sync=args.audit_sync)
     return {
         "mode": "transformer", "arch": args.arch, "scheme": args.scheme,
-        "runtime": args.runtime,
+        "scheme_select": args.scheme_select, "runtime": args.runtime,
         "rounds": [l.round for l in logs],
         "test_loss": [l.test_loss for l in logs],
         "test_acc": [l.test_acc for l in logs],
@@ -193,7 +198,9 @@ def run_selection(args) -> dict:
     cfg = FLConfig(
         num_clients=args.clients, num_clusters=args.clusters,
         select_ratio=args.select_ratio, rounds=args.rounds,
-        scheme=args.scheme, init_energy_mode=args.energy_mode,
+        scheme=args.scheme, scheme_select=args.scheme_select,
+        fedcs_deadline=args.fedcs_deadline,
+        init_energy_mode=args.energy_mode,
         seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
     state = R.synthetic_fleet(cfg, key)
@@ -222,6 +229,7 @@ def run_selection(args) -> dict:
         compile_s = max(cold - warm, 0.0)
     out = {
         "mode": "selection", "scheme": args.scheme,
+        "scheme_select": args.scheme_select,
         "clients": args.clients, "clusters": args.clusters,
         "rounds": list(range(args.rounds)),
         "energy_std": [float(v) for v in metrics["energy_std"]],
@@ -246,7 +254,11 @@ def run_selection(args) -> dict:
                 mean_bid=out["mean_bid"][t],
                 server_reward=out["server_reward"][t],
                 client_reward_sum=out["client_reward_sum"][t],
-                num_winners=out["num_winners"][t])
+                num_winners=out["num_winners"][t],
+                fairness_hist_std=float(metrics["fairness_hist_std"][t]),
+                **{k: float(metrics[k][t]) for k in
+                   ("budget_spent", "budget_remaining", "budget_queue")
+                   if k in metrics})
         obs.flush()
     timing = "incl. compile" if compile_s is None \
         else f"warm; compile={compile_s:.2f}s"
@@ -264,6 +276,23 @@ def main():
     ap.add_argument("--dataset", default="mnist",
                     choices=["mnist", "fmnist", "cifar"])
     ap.add_argument("--scheme", default="gradient_cluster_auction")
+    ap.add_argument("--scheme-select", default="paper",
+                    choices=["paper", "random", "fedcs",
+                             "longterm_auction"],
+                    help="control-plane selection scheme "
+                         "(repro.core.schemes registry): 'paper' is the "
+                         "pre-registry control plane (dispatching on "
+                         "--scheme, bit-identical traces); 'random' picks "
+                         "uniformly per cluster among available clients; "
+                         "'fedcs' gates auction entry on predicted "
+                         "latency meeting the deadline (arXiv:1804.08333)"
+                         "; 'longterm_auction' carries a budget/payment "
+                         "ledger across rounds (arXiv:2508.09181)")
+    ap.add_argument("--fedcs-deadline", type=float, default=1.5,
+                    help="fedcs: bid-time feasibility bound in fleet-mean "
+                         "round times, used when --deadline is 0 (a "
+                         "positive --deadline takes precedence so the "
+                         "auction gates on the enforced deadline)")
     ap.add_argument("--aggregator", default="fedavg",
                     choices=["fedavg", "fedprox"])
     ap.add_argument("--runtime", default="sequential",

@@ -16,9 +16,19 @@ about (see .github/workflows/ci.yml):
     the final round) and null on skipped ones (NaN sanitizes to null in
     the file sinks).
 
+With ``scheme_select`` (the run's control-plane selection scheme,
+repro.core.schemes) the validator additionally checks the scheme-tagged
+scalar series: every round row must carry a numeric
+``fairness_hist_std`` (all schemes emit it), and scheme_state-bearing
+schemes (:data:`STATEFUL_SCHEMES`) must log their budget ledger
+(``budget_spent`` / ``budget_remaining``) every round — a stateful
+scheme whose budget scalars are missing is a broken metrics drain, not
+a valid stream.
+
 CLI (used by CI):
 
-    python -m repro.obs.schema events.jsonl --rounds 6 --eval-every 2
+    python -m repro.obs.schema events.jsonl --rounds 6 --eval-every 2 \
+        --scheme-select longterm_auction
 """
 from __future__ import annotations
 
@@ -47,6 +57,18 @@ REQUIRED: Dict[str, tuple] = {
 
 _EPS = 5e-3   # span clock tolerance (perf_counter rounding at 1e-6 + loop)
 
+# schemes that thread a scheme_state pytree and therefore MUST log their
+# budget scalars every round.  A literal, not an import: this module
+# deliberately has no jax dependency (it validates logs anywhere), so
+# the registry can't be consulted here — tests/test_schemes.py asserts
+# this tuple equals repro.core.schemes.stateful_scheme_names().
+STATEFUL_SCHEMES = ("longterm_auction",)
+
+# scalar series every scheme-tagged stream must carry per round row
+_SCHEME_SCALARS = ("fairness_hist_std",)
+# …plus these for STATEFUL_SCHEMES (the carried budget ledger)
+_BUDGET_SCALARS = ("budget_spent", "budget_remaining")
+
 
 def _is_num(v: Any) -> bool:
     return isinstance(v, (int, float)) and not isinstance(v, bool)
@@ -54,7 +76,8 @@ def _is_num(v: Any) -> bool:
 
 def validate_events(events: List[Dict[str, Any]],
                     rounds: Optional[int] = None,
-                    eval_every: Optional[int] = None) -> List[str]:
+                    eval_every: Optional[int] = None,
+                    scheme_select: Optional[str] = None) -> List[str]:
     """Return a list of human-readable schema violations (empty = valid)."""
     errs: List[str] = []
     spans: Dict[int, Dict[str, Any]] = {}
@@ -159,6 +182,17 @@ def validate_events(events: List[Dict[str, Any]],
             if not due and not skipped:
                 errs.append(f"round {r}: eval off-cadence but "
                             f"test_acc={acc!r} (expected null)")
+
+    # scheme-tagged scalar series (see module docstring)
+    if scheme_select is not None:
+        want = _SCHEME_SCALARS + (
+            _BUDGET_SCALARS if scheme_select in STATEFUL_SCHEMES else ())
+        for r, e in sorted(round_rows.items()):
+            for f in want:
+                if not _is_num(e.get(f)):
+                    errs.append(
+                        f"round {r}: scheme {scheme_select!r} requires "
+                        f"numeric {f!r}, got {e.get(f)!r}")
     return errs
 
 
@@ -185,10 +219,16 @@ def main() -> None:
                          "in [0, N)")
     ap.add_argument("--eval-every", type=int, default=None,
                     help="assert the eval NaN/number cadence")
+    ap.add_argument("--scheme-select", default=None,
+                    help="assert the scheme-tagged scalar series: every "
+                         "round row carries fairness_hist_std, and "
+                         "stateful schemes (longterm_auction) their "
+                         "budget_spent/budget_remaining ledger")
     args = ap.parse_args()
     events = load_jsonl(args.path)
     errs = validate_events(events, rounds=args.rounds,
-                           eval_every=args.eval_every)
+                           eval_every=args.eval_every,
+                           scheme_select=args.scheme_select)
     if errs:
         for e in errs:
             print(f"SCHEMA: {e}", file=sys.stderr)

@@ -152,6 +152,45 @@ def test_resume_with_dynamics_and_defense_state(data, tmp_path):
         np.asarray(obs.device_get(resumed.dyn_state.avail)))
 
 
+def test_resume_scheme_mismatch_raises(data, tmp_path):
+    # the manifest records the active selection scheme; resuming under a
+    # different --scheme-select fails loudly instead of silently
+    # diverging (the checkpointed scheme_state and key chain are
+    # scheme-shaped)
+    path = str(tmp_path / "mismatch_ck")
+    srv = _server(_cfg(rounds=4), data)              # scheme_select=paper
+    srv.run(rounds=3, checkpoint_every=2, checkpoint_path=path)
+    other = _server(_cfg(rounds=4, scheme_select="longterm_auction"), data)
+    with pytest.raises(ValueError, match="--scheme-select"):
+        other.run(rounds=4, checkpoint_path=path, resume=True)
+
+
+def test_resume_bit_exact_with_longterm_scheme_state(data, tmp_path):
+    # the budget/payment ledger (SelectionState.scheme_state) must ride
+    # the checkpoint: a resumed long-term-auction run walks the
+    # remaining rounds bit-identically to an uninterrupted one
+    cfg = _cfg(rounds=4, scheme_select="longterm_auction")
+    ref = _server(cfg, data)
+    ref.run(rounds=4)
+
+    path = str(tmp_path / "longterm_ck")
+    crashed = _server(cfg, data)
+    crashed.run(rounds=3, checkpoint_every=2, checkpoint_path=path)
+    resumed = _server(cfg, data)
+    logs_res = resumed.run(rounds=4, checkpoint_path=path, resume=True)
+
+    assert [l.round for l in logs_res] == [2, 3]
+    for x, y in zip(_leaves(ref.params), _leaves(resumed.params)):
+        np.testing.assert_array_equal(x, y)
+    a, b = ref.state.scheme_state, resumed.state.scheme_state
+    np.testing.assert_array_equal(np.asarray(obs.device_get(a.spent)),
+                                  np.asarray(obs.device_get(b.spent)))
+    np.testing.assert_array_equal(np.asarray(obs.device_get(a.queue)),
+                                  np.asarray(obs.device_get(b.queue)))
+    np.testing.assert_array_equal(np.asarray(obs.device_get(a.paid)),
+                                  np.asarray(obs.device_get(b.paid)))
+
+
 def test_no_checkpoint_written_when_disabled(data, tmp_path):
     path = str(tmp_path / "never")
     srv = _server(_cfg(rounds=2), data)
