@@ -646,6 +646,111 @@ def bench_robust_agg(quick: bool):
 
 
 # ----------------------------------------------------------------------
+# macro: self-healing server (ISSUE 10 acceptance run)
+# ----------------------------------------------------------------------
+
+def bench_self_healing(quick: bool):
+    """The self-healing acceptance comparison: a sub_clip adversary
+    coalition (30% of the fleet, colluding just under the static clip
+    threshold) against (a) no defense at all, (b) the static clip — it
+    never touches a sub-threshold row, so accuracy measurably degrades —
+    and (c) the full self-healing stack: adaptive MAD-band screening +
+    reputation-priced bidding + the divergence watchdog.  The headline
+    is ``selfheal_gap`` (within 0.05 of the clean baseline in the full
+    60-round run) vs ``static_gap``; ``watchdog_overhead`` prices the
+    watchdog's warm-loop hooks (delta scaling + snapshot refs) on a
+    clean run."""
+    from repro.configs.base import FLConfig
+    from repro.core.adapters import cnn_adapter
+    from repro.core.server import FederatedServer
+    from repro.data.partition import partition_clients
+    from repro.data.synthetic import make_image_dataset
+
+    nclients = 24 if quick else 32
+    warm_rounds, timed_rounds = (2, 4) if quick else (5, 20)
+    rounds = 6 if quick else 60
+    eval_every = 3 if quick else 10
+    base = FLConfig(num_clients=nclients, num_clusters=4,
+                    select_ratio=0.3, local_epochs=2, lr=0.1,
+                    non_iid_level=0.3,
+                    scheme="gradient_cluster_auction",
+                    sample_window=20, cluster_resamples=2,
+                    init_energy_mode="normal", eval_every=eval_every,
+                    runtime="device", seed=0)
+    train, test = make_image_dataset("mnist", n_train=nclients * 150,
+                                     n_test=256, seed=0)
+    adapter = cnn_adapter("mnist")
+    clients = partition_clients(train.y, base, seed=0)
+
+    def cell(label, **kw):
+        cfg = base.replace(**kw)
+        srv = FederatedServer(cfg, adapter, train.x, train.y, clients,
+                              {"x": test.x[:256], "y": test.y[:256]})
+        srv.run(rounds=warm_rounds)
+        jax.block_until_ready(srv.params)
+        t0 = time.time()
+        for t in range(warm_rounds, warm_rounds + timed_rounds):
+            srv._dispatch_round(t, eval_now=False)
+        srv._flush_pending()
+        jax.block_until_ready(srv.params)
+        wall = time.time() - t0
+        for t in range(warm_rounds + timed_rounds, rounds):
+            due = t % eval_every == 0 or t == rounds - 1
+            srv._dispatch_round(t, eval_now=due)
+            if due and cfg.watchdog_enabled:
+                srv._flush_pending()       # watchdog detection boundary
+        srv._flush_pending()
+        acc, _ = jax.device_get(srv._eval_step(srv.params, srv._test_dev))
+        row = {"rounds_per_s": timed_rounds / wall, "test_acc": float(acc)}
+        if srv.defended:
+            row.update(srv.defense_totals)
+        if cfg.watchdog_enabled:
+            row.update(srv.watchdog_totals)
+        _row(f"self_healing_{label}", wall / timed_rounds * 1e6,
+             f"rounds_per_s={row['rounds_per_s']:.2f} "
+             f"acc={row['test_acc']:.3f}")
+        return row
+
+    atk = dict(attack="sub_clip", adversary_frac=0.3)
+    out = {"clients": nclients, "rounds": rounds, "attack": "sub_clip",
+           "adversary_frac": 0.3, "cells": {}}
+    out["cells"]["clean"] = cell("clean")
+    out["cells"]["clean_watchdog"] = cell("clean_watchdog", watchdog="on")
+    out["cells"]["undefended"] = cell("undefended", **atk)
+    out["cells"]["static_clip"] = cell("static_clip", defense="clip",
+                                       **atk)
+    out["cells"]["selfheal"] = cell(
+        "selfheal", defense="clip", defense_mode="adaptive",
+        reputation_mode="price", watchdog="on", **atk)
+
+    cells = out["cells"]
+    clean = cells["clean"]
+    out["static_gap"] = clean["test_acc"] - cells["static_clip"]["test_acc"]
+    out["selfheal_gap"] = clean["test_acc"] - cells["selfheal"]["test_acc"]
+    out["watchdog_overhead"] = (
+        clean["rounds_per_s"]
+        / cells["clean_watchdog"]["rounds_per_s"] - 1.0)
+    _row("self_healing_summary", 0.0,
+         f"static_gap={out['static_gap']:.3f} "
+         f"selfheal_gap={out['selfheal_gap']:.3f} "
+         f"wd_overhead={out['watchdog_overhead'] * 100:.1f}%")
+    _save("self_healing", out)
+    _summary("self_healing", clients=nclients, rounds=rounds,
+             acc_clean=clean["test_acc"],
+             acc_attacked_undefended=cells["undefended"]["test_acc"],
+             acc_attacked_static_clip=cells["static_clip"]["test_acc"],
+             acc_attacked_selfheal=cells["selfheal"]["test_acc"],
+             static_gap=out["static_gap"],
+             selfheal_gap=out["selfheal_gap"],
+             selfheal_within_005=bool(out["selfheal_gap"] <= 0.05),
+             rollbacks_selfheal=cells["selfheal"].get("rollbacks", 0),
+             screened_selfheal=cells["selfheal"].get("screened", 0),
+             warm_rounds_per_s_clean=clean["rounds_per_s"],
+             warm_rounds_per_s_selfheal=cells["selfheal"]["rounds_per_s"],
+             watchdog_overhead=out["watchdog_overhead"])
+
+
+# ----------------------------------------------------------------------
 # paper figures (FL simulations)
 # ----------------------------------------------------------------------
 
@@ -772,6 +877,7 @@ BENCHES = {
     "round_pipeline": bench_round_pipeline,
     "fleet_dynamics": bench_fleet_dynamics,
     "robust_agg": bench_robust_agg,
+    "self_healing": bench_self_healing,
     "scheme_zoo": bench_scheme_zoo,
     "fig3": bench_virtual_dataset,
     "fig4": bench_fig4,

@@ -1,17 +1,31 @@
 """Pytree checkpointing (no orbax offline): flatten a pytree to a .npz with
 path-encoded keys + a JSON manifest for dtypes/tree structure. Works for
 model params, optimizer state, and FL server state.
+
+Writes are crash-safe: both the .npz and the manifest land in temp files
+first and are moved into place with ``os.replace`` (atomic on POSIX), and
+the manifest records a sha256 digest of the snapshot so a truncated or
+bit-rotted .npz fails :func:`restore` with :class:`CheckpointCorrupt`
+instead of a raw unpickling traceback — the watchdog's checkpoint ring
+relies on that to fall back to the next-older entry.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import warnings
+import zipfile
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A snapshot on disk is unreadable or fails its integrity check
+    (truncated write, bit rot, or a manifest/npz digest mismatch)."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -32,30 +46,69 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _digest(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 def save(path: str, tree, step: int = 0, extra: Dict[str, Any] = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     treedef = jax.tree_util.tree_structure(tree)
+    npz_path = path if path.endswith(".npz") else path + ".npz"
+    # temp-write + os.replace so a crash mid-save never leaves a torn
+    # snapshot under the real name (the tmp name is pid-scoped so two
+    # processes checkpointing the same path can't collide mid-write)
+    tmp_npz = npz_path + f".tmp{os.getpid()}"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp_npz, npz_path)
     manifest = {
         "step": step,
         "treedef": str(treedef),
         "keys": list(flat.keys()),
+        "digest": _digest(npz_path),
         "extra": extra or {},
     }
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
-    with open(path.removesuffix(".npz") + ".json", "w") as f:
+    json_path = path.removesuffix(".npz") + ".json"
+    tmp_json = json_path + f".tmp{os.getpid()}"
+    with open(tmp_json, "w") as f:
         json.dump(manifest, f, indent=1)
+    os.replace(tmp_json, json_path)
 
 
 def restore(path: str, like) -> Tuple[Any, int]:
-    """Restore into the structure of `like` (a pytree of arrays or shapes)."""
+    """Restore into the structure of `like` (a pytree of arrays or shapes).
+
+    Raises :class:`CheckpointCorrupt` when the manifest is unparseable,
+    the .npz digest doesn't match the manifest's recorded digest, or the
+    .npz itself fails to load."""
     base = path.removesuffix(".npz")
-    data = np.load(base + ".npz")
-    with open(base + ".json") as f:
-        manifest = json.load(f)
+    try:
+        with open(base + ".json") as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorrupt(
+            f"checkpoint manifest {base + '.json'} is unreadable: {e}"
+        ) from e
+    stored_digest = manifest.get("digest")
+    if stored_digest is not None and _digest(base + ".npz") != stored_digest:
+        raise CheckpointCorrupt(
+            f"checkpoint {base + '.npz'} fails its integrity check: "
+            "content digest does not match the manifest (truncated or "
+            "corrupted snapshot)")
+    try:
+        data = np.load(base + ".npz")
+        files = set(data.files)
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointCorrupt(
+            f"checkpoint {base + '.npz'} is unreadable: {e}") from e
     flat_like = _flatten(like)
-    assert set(flat_like) == set(data.files), (
-        f"checkpoint keys mismatch: {set(flat_like) ^ set(data.files)}")
+    assert set(flat_like) == files, (
+        f"checkpoint keys mismatch: {set(flat_like) ^ files}")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     stored_td = manifest.get("treedef")
     if stored_td is not None and stored_td != str(treedef):

@@ -271,16 +271,44 @@ class FLConfig:
     #   Byzantine: round(frac * N) clients drawn once per run from the
     #   dedicated adversary PRNG chain corrupt every update they send
     attack: str = "none"          # none | nan | scale | signflip | noise
-    #   — how an adversary perturbs its param delta after local training
-    #   (on device, before aggregation); see dynamics.corrupt_updates
+    #   | sub_clip | alie | on_off — how an adversary perturbs its param
+    #   delta after local training (on device, before aggregation); the
+    #   last three are ADAPTIVE attacks that observe the defense's
+    #   running state (sub_clip sits just under the clip EMA threshold,
+    #   alie hides inside the honest coordinate spread, on_off alternates
+    #   clean/dirty phases to farm reputation); see
+    #   dynamics.corrupt_updates
     attack_scale: float = 25.0    # magnitude knob: multiplier for
     #   scale/signflip, noise-std multiple of the cohort RMS for noise
+    sub_clip_margin: float = 0.9  # sub_clip: the attacker targets this
+    #   fraction of the STATIC clip threshold (clip_mult x clip EMA) so
+    #   a fixed-threshold clip defense never touches it
+    alie_z: float = 1.0           # alie: colluders move to honest mean
+    #   minus z x per-coordinate honest std (small z stays inside the
+    #   trimmed-mean band)
+    onoff_period: int = 2         # on_off: attack for this many rounds,
+    #   then behave for as many (strike decay farms reputation back)
     defense: str = "none"         # none | clip | trimmed | median —
     #   robust aggregation applied to the per-update matrix: all three
     #   non-none defenses first QUARANTINE non-finite rows (excluded
     #   from the weighted sum, survivor weights renormalized), then
     #   'clip' l2-clips each row to clip_mult x a running median norm,
     #   'trimmed'/'median' replace the weighted mean coordinate-wise
+    defense_mode: str = "static"  # static | adaptive. 'static' keeps the
+    #   PR-8 fixed thresholds (clip_mult, trim_frac).  'adaptive'
+    #   auto-tunes the screen from device-resident running statistics:
+    #   a survivor-norm median/MAD band (norms above
+    #   median + k_eff x MAD are screened out and struck), where k_eff
+    #   tightens as the quarantine/outlier pressure EMA rises and
+    #   relaxes back as it falls — see aggregation.DefenseState
+    adapt_k: float = 3.0          # adaptive screen: base MAD multiplier
+    #   of the outlier band (k_eff = adapt_k / (1 + adapt_gain * press))
+    adapt_gain: float = 4.0       # how hard attack pressure tightens k
+    pressure_beta: float = 0.2    # EMA rate of the pressure statistic
+    adapt_mad_floor: float = 0.05  # MAD floor as a fraction of the
+    #   running median norm (a zero-spread cohort must not ban everyone)
+    outlier_strike: float = 0.5   # reputation strikes earned per
+    #   adaptive-screen exclusion (quarantine always strikes 1.0)
     clip_mult: float = 2.0        # clip threshold = clip_mult * running
     #                               median of per-update l2 norms
     clip_beta: float = 0.3        # EMA rate of that running median
@@ -290,11 +318,42 @@ class FLConfig:
     #   this many (decayed) quarantine strikes loses eligibility
     strike_decay: float = 0.98    # per-round multiplicative strike decay
     #   (banned clients eventually fall below threshold and get re-probed)
+    reputation_mode: str = "ban"  # ban | price. 'ban' is the PR-8 hard
+    #   gate (strikes >= strike_threshold lose auction eligibility,
+    #   bit-identical traces).  'price' keeps every client eligible but
+    #   multiplies the reputation penalty into the effective bid the
+    #   winner ranking sees (auction.effective_bids): a tainted client
+    #   must bid cheaper to win, and recovers as strikes decay
+    rep_price_gain: float = 1.0   # price mode: effective bid =
+    #   bid * (1 + gain * strikes); rewards still pay the TRUE bid
+
+    # divergence watchdog (repro.core.server): ring of the last K healthy
+    # snapshots + a detector on the drained eval stream (non-finite eval,
+    # loss spike vs EMA, accuracy collapse); a trigger restores the
+    # newest healthy snapshot, tightens the defense, decays the server
+    # step scale and resumes on a perturbed key chain.  'off' (default)
+    # keeps every code path and trace untouched.
+    watchdog: str = "off"          # off | on
+    watchdog_ring: int = 3         # snapshots kept in the rollback ring
+    watchdog_loss_mult: float = 2.5  # trigger: loss > mult * loss EMA
+    watchdog_acc_drop: float = 0.25  # trigger: acc < peak acc - drop
+    watchdog_lr_decay: float = 0.5   # server step scale multiplier per
+    #   rollback (device scalar — never retraces); 1.0 disables
+    watchdog_tighten: float = 1.5    # defense tightening per rollback:
+    #   the screen thresholds divide by this cumulative factor
 
     @property
     def adversary_enabled(self) -> bool:
         """True when corrupted-update injection is active."""
         return self.adversary_frac > 0.0 and self.attack != "none"
+
+    @property
+    def watchdog_enabled(self) -> bool:
+        """True when the divergence watchdog (snapshot ring + detector +
+        rollback policy) is active.  False is the guard the watchdog-off
+        bit-identity regression rests on: no ring, no detector, no
+        server step scale — the pre-watchdog code path runs untouched."""
+        return self.watchdog == "on"
 
     @property
     def defended(self) -> bool:

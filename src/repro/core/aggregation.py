@@ -46,7 +46,7 @@ sizes never retrace (asserted in tests/test_robust.py).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +56,57 @@ from repro import obs
 from repro.configs.base import FLConfig
 
 DEFENSES = ("none", "clip", "trimmed", "median")
+DEFENSE_MODES = ("static", "adaptive")
+
+
+@dataclass
+class DefenseState:
+    """Device-resident carried state of the screened aggregation — the
+    auto-tuning statistics that replace PR-8's single clip-EMA scalar.
+    A pytree whose trailing fields follow the Optional-last-field rule
+    (SelectionState.staleness/strikes): a feature that is off keeps its
+    field ``None`` (an empty pytree node), so static-mode and
+    watchdog-off traces carry exactly the one clip-EMA leaf they always
+    did.
+
+      * ``clip_ema``  — running median survivor norm (0 = unseeded);
+        the clip defense's threshold scale, same EMA as PR 8.
+      * ``mad_ema``   — running median absolute deviation of survivor
+        norms (adaptive mode only): the width of the honest norm band.
+      * ``pressure``  — EMA of the per-round screen rate (quarantined +
+        outlier fraction, adaptive mode only): rises under attack,
+        decays as the fleet heals — the auto-tuning signal that
+        tightens ``adapt_k`` and relaxes it back.
+      * ``tighten``   — cumulative watchdog tightening factor (>= 1,
+        watchdog on only): every rollback multiplies it by
+        ``cfg.watchdog_tighten`` and the screen thresholds divide by it.
+    """
+
+    clip_ema: jnp.ndarray
+    mad_ema: Optional[jnp.ndarray] = None
+    pressure: Optional[jnp.ndarray] = None
+    tighten: Optional[jnp.ndarray] = None
+
+
+jax.tree_util.register_dataclass(
+    DefenseState,
+    data_fields=["clip_ema", "mad_ema", "pressure", "tighten"],
+    meta_fields=[])
+
+
+def init_defense_state(cfg: FLConfig) -> DefenseState:
+    """Round-0 defense state under ``cfg``: adaptive statistics exist
+    only in adaptive mode, the tighten factor only with the watchdog on
+    (None fields are empty pytree nodes — the bit-identity mechanism)."""
+    if cfg.defense_mode not in DEFENSE_MODES:
+        raise ValueError(f"unknown defense_mode={cfg.defense_mode!r}; "
+                         f"expected {DEFENSE_MODES}")
+    adaptive = cfg.defense_mode == "adaptive"
+    return DefenseState(
+        clip_ema=jnp.float32(0.0),
+        mad_ema=jnp.float32(0.0) if adaptive else None,
+        pressure=jnp.float32(0.0) if adaptive else None,
+        tighten=jnp.float32(1.0) if cfg.watchdog_enabled else None)
 
 
 @dataclass
@@ -133,18 +184,21 @@ def _percentile_sorted(sorted_vals: jnp.ndarray, v: jnp.ndarray,
 
 
 def make_screened_step(cfg: FLConfig):
-    """Compile the fused corrupt -> quarantine -> defend -> aggregate ->
-    reputation program.  Signature::
+    """Compile the fused corrupt -> quarantine -> (adaptive band screen)
+    -> defend -> aggregate -> reputation program.  Signature::
 
         (deltas (cap, D) f32, weights (cap,) f32, valid (cap,) bool,
          adv (cap,) bool, ids (cap,) int32, strikes (N,) f32,
-         clip_state () f32, key)
-          -> (agg_delta (D,), new_strikes (N,), new_clip_state (),
+         dstate: DefenseState, round_idx () i32, key)
+          -> (agg_delta (D,), new_strikes (N,), new_dstate,
               report: dict of device scalars)
 
-    ``clip_state`` carries the running median update norm (0 = unseeded);
-    the report rides the server's pending buffer and drains with the one
-    batched logging fetch.  ``cfg`` is closed over (static)."""
+    ``dstate`` carries the running defense statistics (clip EMA and, in
+    adaptive mode, the MAD band + pressure EMA — see
+    :class:`DefenseState`); ``round_idx`` feeds phase-aware attacks
+    (on_off).  The report rides the server's pending buffer and drains
+    with the one batched logging fetch.  ``cfg`` is closed over
+    (static): one compile per run regardless of mode."""
     # deferred: repro.sim.runtime (imported by the repro.sim package
     # init) needs UpdateBatch from this module, so a top-level dynamics
     # import here would be circular
@@ -152,11 +206,22 @@ def make_screened_step(cfg: FLConfig):
     defense = cfg.defense
     if defense not in DEFENSES:
         raise ValueError(f"unknown defense={defense!r}; expected {DEFENSES}")
+    adaptive = cfg.defense_mode == "adaptive" and defense != "none"
+    if cfg.defense_mode not in DEFENSE_MODES:
+        raise ValueError(f"unknown defense_mode={cfg.defense_mode!r}; "
+                         f"expected {DEFENSE_MODES}")
 
-    def screen(deltas, weights, valid, adv, ids, strikes, clip_state, key):
+    def screen(deltas, weights, valid, adv, ids, strikes, dstate,
+               round_idx, key):
         obs.jax_stats.note_trace("screened_agg")   # trace-time only
         cap = deltas.shape[0]
-        deltas = DYN.corrupt_updates(cfg, key, deltas, adv, valid)
+        clip_state = dstate.clip_ema
+        # adaptive adversaries observe the defense's carried state: the
+        # clip EMA and round phase flow into the corruption model inside
+        # the same fused program — threat awareness costs no host sync
+        deltas = DYN.corrupt_updates(cfg, key, deltas, adv, valid,
+                                     clip_ema=clip_state,
+                                     round_idx=round_idx)
         finite = jnp.isfinite(deltas).all(axis=1)
         if defense == "none":
             # no screening: corrupted rows flow into the aggregate (the
@@ -166,7 +231,6 @@ def make_screened_step(cfg: FLConfig):
         else:
             quarantined = valid & ~finite
             ok = valid & finite
-        okf = ok.astype(jnp.float32)
         # metrics are computed over finite valid rows only, so a NaN row
         # never poisons the norm statistics even with the defense off
         mok = valid & finite
@@ -185,7 +249,41 @@ def make_screened_step(cfg: FLConfig):
                       + cfg.clip_beta * p50,
                       p50),
             clip_state)
+        # watchdog tightening: a rollback multiplies the cumulative
+        # factor, every threshold divides by it (None = watchdog off,
+        # trace unchanged)
+        tight = dstate.tighten if dstate.tighten is not None else None
+        if adaptive:
+            # auto-tuned outlier band: norms above the running
+            # median + k_eff x MAD are screened out (excluded like
+            # quarantine) and earn fractional strikes.  k_eff tightens
+            # as the pressure EMA rises and relaxes as it falls — this
+            # is what catches a sub_clip attacker sitting under the
+            # STATIC threshold: its norm still lands far outside the
+            # honest MAD band.
+            dev = jnp.where(mok, jnp.abs(norms - p50), jnp.inf)
+            mad = _percentile_sorted(jnp.sort(dev), v_metric, 0.50)
+            new_mad = jnp.where(
+                v_metric > 0,
+                jnp.where(dstate.clip_ema > 0,
+                          (1.0 - cfg.clip_beta) * dstate.mad_ema
+                          + cfg.clip_beta * mad,
+                          mad),
+                dstate.mad_ema)
+            k_eff = cfg.adapt_k / (1.0 + cfg.adapt_gain * dstate.pressure)
+            if tight is not None:
+                k_eff = k_eff / tight
+            mad_safe = jnp.maximum(new_mad, cfg.adapt_mad_floor * new_clip)
+            thr_band = new_clip + k_eff * mad_safe
+            outlier = mok & (norms > thr_band) & (new_clip > 0)
+            ok = ok & ~outlier
+        else:
+            new_mad = dstate.mad_ema
+            outlier = jnp.zeros_like(valid)
+        okf = ok.astype(jnp.float32)
         thr = cfg.clip_mult * new_clip
+        if tight is not None:
+            thr = thr / tight
         clipped = mok & (norms > thr)
         v = ok.sum()
 
@@ -225,20 +323,43 @@ def make_screened_step(cfg: FLConfig):
 
         # reputation feedback: one on-device scatter per screen — strikes
         # reach the host only through metrics drained at logging
-        # boundaries (num_banned), never a dedicated per-round sync
+        # boundaries (num_banned), never a dedicated per-round sync.
+        # Band outliers earn a fractional strike (0.0 add when the band
+        # screen is off keeps static-mode strike values bit-exact).
         n = strikes.shape[0]
         new_strikes = strikes.at[jnp.clip(ids, 0, n - 1)].add(
-            jnp.where(quarantined, 1.0, 0.0))
+            jnp.where(quarantined, 1.0, 0.0)
+            + cfg.outlier_strike * jnp.where(outlier, 1.0, 0.0))
+        if adaptive:
+            # attack-pressure EMA: fraction of finite rows rejected this
+            # round (quarantine + band); feeds next round's k_eff
+            rejected = (quarantined | outlier).sum().astype(jnp.float32)
+            frac = rejected / jnp.maximum(v_metric, 1).astype(jnp.float32)
+            new_pressure = ((1.0 - cfg.pressure_beta) * dstate.pressure
+                            + cfg.pressure_beta * frac)
+        else:
+            new_pressure = dstate.pressure
+        new_dstate = DefenseState(clip_ema=new_clip, mad_ema=new_mad,
+                                  pressure=new_pressure,
+                                  tighten=dstate.tighten)
         report: Dict[str, jnp.ndarray] = {
             "num_quarantined": quarantined.sum(),
+            "num_screened": outlier.sum(),
             "num_survivors": v,
+            "survivor_frac": jnp.where(
+                valid.sum() > 0,
+                v.astype(jnp.float32)
+                / jnp.maximum(valid.sum(), 1).astype(jnp.float32),
+                0.0),
             "clipped_frac": jnp.where(
                 v_metric > 0,
                 clipped.sum() / jnp.maximum(v_metric, 1).astype(jnp.float32),
                 0.0),
             "update_norm_p50": p50,
             "update_norm_p99": p99,
+            "defense_pressure": (new_pressure if adaptive
+                                 else jnp.float32(0.0)),
         }
-        return agg, new_strikes, new_clip, report
+        return agg, new_strikes, new_dstate, report
 
     return jax.jit(screen)

@@ -113,6 +113,23 @@ def price_round(clusters: jnp.ndarray, residual: jnp.ndarray,
     return c, bids
 
 
+def effective_bids(bids: jnp.ndarray, strikes, cfg: FLConfig) -> jnp.ndarray:
+    """Reputation-priced bid: a tainted client competes at an inflated
+    price ``b * (1 + gain * strikes)`` so it must underbid to win back
+    trust, instead of being hard-banned at a strike threshold.
+
+    Applied ONLY at the winner-ranking step — eligibility gates, the
+    paper's sampling-threshold probe, and payment all stay on the TRUE
+    bids (the platform prices risk, it does not rewrite the contract).
+    When reputation pricing is off (ban mode, or no strikes tracked)
+    this returns ``bids`` itself — the SAME traced object, so defended
+    ban-mode traces match PR 8 bit-exactly."""
+    if strikes is None or cfg.reputation_mode != "price":
+        return bids
+    return jnp.where(bids >= INF, INF,
+                     bids * (1.0 + cfg.rep_price_gain * strikes))
+
+
 # ----------------------------------------------------------------------
 # winner selection
 # ----------------------------------------------------------------------

@@ -74,10 +74,14 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
     dynamics-free trace is unchanged)."""
     obs.jax_stats.note_trace("round_step")   # fires at (re)trace time only
     scheme = SCH.get_scheme(cfg.scheme_select)
-    if state.strikes is not None:
-        # auction reputation: quarantine repeat offenders (strikes at or
-        # above the ban threshold) lose eligibility exactly like offline
-        # clients — the pure 'random' baseline stays blind, same as avail
+    if state.strikes is not None and cfg.reputation_mode == "ban":
+        # auction reputation, ban mode: quarantine repeat offenders
+        # (strikes at or above the ban threshold) lose eligibility exactly
+        # like offline clients — the pure 'random' baseline stays blind,
+        # same as avail.  Price mode drops the hard gate: strikes inflate
+        # the effective bid inside each scheme's ranking step instead
+        # (auction.effective_bids), so a tainted client can still win by
+        # underbidding.
         trust = state.strikes < cfg.strike_threshold
         avail = trust if avail is None else (avail & trust)
     win, info = scheme.select(state, cfg, key, winners_impl=winners_impl,
@@ -111,6 +115,11 @@ def _round_body(state: SEL.SelectionState, key, cfg: FLConfig,
     if state.strikes is not None:
         metrics["num_banned"] = (
             state.strikes >= cfg.strike_threshold).sum()
+        # continuous trust score 1/(1+strikes) in (0, 1] — the scalar the
+        # obs stream tracks for reputation pricing (1.0 = clean record)
+        trust_score = 1.0 / (1.0 + state.strikes)
+        metrics["trust_mean"] = trust_score.mean()
+        metrics["trust_min"] = trust_score.min()
     return new_state, win, metrics
 
 

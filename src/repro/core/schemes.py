@@ -226,7 +226,8 @@ def fedcs_select(state: SEL.SelectionState, cfg: FLConfig, key,
     if avail is not None:
         eligible = eligible & avail
     cs = A.service_cost(state.local_sizes, state.history, cfg)
-    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+    win = A.cluster_winners(A.effective_bids(bids, state.strikes, cfg),
+                            state.clusters, eligible, kj,
                             cfg.num_clusters, tie_break=cs,
                             impl=winners_impl)
     return win, {"bids": bids, "costs": c, "s_min": smin,
@@ -314,7 +315,8 @@ def longterm_select(state: SEL.SelectionState, cfg: FLConfig, key,
     if avail is not None:
         eligible = eligible & avail
     cs = A.service_cost(state.local_sizes, state.history, cfg)
-    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+    win = A.cluster_winners(A.effective_bids(bids, state.strikes, cfg),
+                            state.clusters, eligible, kj,
                             cfg.num_clusters, tie_break=cs,
                             impl=winners_impl)
     return win, {"bids": bids, "costs": c, "s_min": smin,

@@ -180,9 +180,14 @@ def select_round(state: SelectionState, cfg: FLConfig, key,
     eligible = (state.local_sizes >= smin) & (c < A.INF)
     if avail is not None:
         eligible = eligible & avail
-    # step 2: per-cluster reverse auction among eligible clients
+    # step 2: per-cluster reverse auction among eligible clients.
+    # Reputation pricing (--reputation-mode price) inflates a tainted
+    # client's bid at the RANKING step only; eligibility, the threshold
+    # probe, and payment stay on the true bids.  With pricing off,
+    # effective_bids returns `bids` itself — identical trace.
     cs = A.service_cost(state.local_sizes, state.history, cfg)
-    win = A.cluster_winners(bids, state.clusters, eligible, kj,
+    win = A.cluster_winners(A.effective_bids(bids, state.strikes, cfg),
+                            state.clusters, eligible, kj,
                             cfg.num_clusters, tie_break=cs,
                             impl=winners_impl)
     info.update(bids=bids, costs=c, s_min=smin,

@@ -48,8 +48,10 @@ from __future__ import annotations
 
 import json
 import os
+from collections import deque
+from copy import deepcopy
 from dataclasses import dataclass, replace as dc_replace
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -118,6 +120,30 @@ class _BufferedUpdate:
     mass: float
     round: int
     arrival: int
+    # fraction of the sub-cohort's rows that survived screening (device
+    # scalar from the screened report), or None undefended.  The fold
+    # scales the entry's mass by it so a fully-quarantined late cohort
+    # contributes ZERO mass — its (zeroed) delta must not dilute the
+    # fold, and an all-quarantined buffer must not divide by zero.
+    mass_scale: Any = None
+
+
+@dataclass
+class _RingEntry:
+    """One watchdog ring snapshot: ``tree`` is exactly the
+    :meth:`FederatedServer._ckpt_tree` pytree (params, selection state,
+    key chain, defense state, server LR — the PR 8 checkpoint format,
+    held on device instead of disk; JAX arrays are immutable so the refs
+    ARE the snapshot), plus the host-side state a rollback must restore
+    verbatim."""
+
+    round: int
+    tree: Dict[str, Any]
+    reward: float
+    last_eval: Tuple[float, float]
+    dyn_rng_state: Optional[dict] = None
+    host_avail: Optional[np.ndarray] = None
+
 
 # device metric keys the dynamics round step adds; drained with the same
 # batched fetch as the base metrics and mirrored into the round series
@@ -126,8 +152,9 @@ _DYN_METRIC_KEYS = ("num_completed", "num_late", "num_dropped",
                     "num_avail")
 
 # device metric keys the defended round step adds (repro.core.rounds
-# emits num_banned only when SelectionState carries strikes)
-_DEF_METRIC_KEYS = ("num_banned",)
+# emits them only when SelectionState carries strikes; trust_* is the
+# continuous reputation score the pricing mode bids against)
+_DEF_METRIC_KEYS = ("num_banned", "trust_mean", "trust_min")
 
 # device metric keys the selection-scheme zoo adds: fairness_hist_std
 # comes from every scheme; the budget_* ledger scalars only from
@@ -232,12 +259,38 @@ class FederatedServer:
             self._gather_rows = jax.jit(
                 lambda d, i: jnp.take(d, i, axis=0, mode="clip"))
             self._fold_key = jax.jit(jax.random.fold_in)
-            # running median update norm (0 = unseeded), the clip
-            # defense's threshold scale; stays on device between rounds
-            self._clip_state = jnp.float32(0.0)
+            # running defense statistics (clip EMA + adaptive MAD band /
+            # pressure when --defense-mode adaptive, tighten factor when
+            # the watchdog is on); stays on device between rounds
+            self._defense_state = AGG.init_defense_state(cfg)
             # host tallies filled at flush boundaries (launch summary)
             self.defense_totals: Dict[str, int] = {"quarantined": 0,
+                                                   "screened": 0,
                                                    "banned_final": 0}
+        self._watchdog = cfg.watchdog_enabled
+        if self._watchdog:
+            # divergence watchdog: ring of the last K healthy snapshots
+            # (each a _ckpt_tree pytree — the checkpoint format, held on
+            # device), a detector over the drained eval stream, and a
+            # rollback policy that restores the newest healthy entry,
+            # tightens the defense and decays the server LR
+            self._wd_ring: deque = deque(
+                maxlen=max(int(cfg.watchdog_ring), 1))
+            self._srv_lr = jnp.float32(1.0)
+            self._wd_loss_ema: Optional[float] = None
+            self._wd_acc_peak = float("-inf")
+            self._wd_healthy = False      # healthy eval since last rollback
+            self._wd_rollbacks = 0
+            self.watchdog_totals: Dict[str, int] = {"rollbacks": 0,
+                                                    "snapshots": 0}
+            # server LR enters as a bit-exact no-op at lr=1.0: the delta
+            # path scales by exactly 1.0 (IEEE identity) and the blend
+            # `b + (s-1)*(b-a)` adds exactly 0.0 — a watchdog-on run
+            # that never rolls back matches watchdog-off numerically
+            self._scale_delta = jax.jit(lambda a, s: a * s)
+            self._wd_blend = jax.jit(
+                lambda p0, p1, s: jax.tree.map(
+                    lambda a, b: b + (s - 1.0) * (b - a), p0, p1))
         # host mirror of participation counts: stage-3 shuffle seeding
         # reads history per winner, which on the device array cost one
         # int(history[i]) sync per client per round.
@@ -357,12 +410,16 @@ class FederatedServer:
         idp[:real.size] = ids[real]
         valid = idp >= 0
         adv = valid & self._adv_mask[np.clip(idp, 0, None)]
-        gd, wd, vd, ad, idd, fold = obs.device_put(
-            (gidx, w, valid, adv, idp, np.uint32(2 * t + chan + 1)))
+        gd, wd, vd, ad, idd, rnd, fold = obs.device_put(
+            (gidx, w, valid, adv, idp, np.int32(t),
+             np.uint32(2 * t + chan + 1)))
         dpad = self._gather_rows(upd.deltas, gd)
         key = self._fold_key(self._adv_root, fold)
-        agg, new_strikes, self._clip_state, report = self._screen_step(
-            dpad, wd, vd, ad, idd, strikes, self._clip_state, key)
+        agg, new_strikes, self._defense_state, report = self._screen_step(
+            dpad, wd, vd, ad, idd, strikes, self._defense_state, rnd, key)
+        if self._watchdog:
+            # server LR (decayed by rollbacks): exact no-op at 1.0
+            agg = self._scale_delta(agg, self._srv_lr)
         return self._apply_delta(params0, agg), report, new_strikes
 
     # ------------------------------------------------------------------
@@ -406,6 +463,9 @@ class FederatedServer:
                 else:
                     new_params = self.runtime.train_cohort(
                         self.params, sel_idx, self._host_history)
+                    if new_params is not None and self._watchdog:
+                        new_params = self._wd_blend(self.params, new_params,
+                                                    self._srv_lr)
             if new_params is not None:
                 self.params = new_params
             else:
@@ -474,12 +534,32 @@ class FederatedServer:
         if not (force or len(arrived) >= self.cfg.buffer_goal
                 or t - oldest >= self.cfg.buffer_timeout):
             return 0
+        # defended entries carry their screening survivor fraction as a
+        # device scalar; one explicit (counted) fetch scales the masses
+        # so quarantined rows carry no weight in the fold
+        if any(e.mass_scale is not None for e in arrived):
+            scales = obs.device_get(
+                [e.mass_scale if e.mass_scale is not None
+                 else np.float32(1.0) for e in arrived])
+            masses = [e.mass * float(s) for e, s in zip(arrived, scales)]
+        else:
+            masses = [e.mass for e in arrived]
+        total = sum(masses)
+        if total <= 0.0:
+            # every arrived row was quarantined: the buffered deltas are
+            # all screened-to-zero — drop them loudly instead of folding
+            # a 0/0 into the params
+            self._late_buffer = [e for e in self._late_buffer
+                                 if e.arrival > t]
+            obs.OBS.counter("dyn/buffer_all_quarantined")
+            obs.OBS.event("dynamics", name="buffer/all_quarantined",
+                          round=t, entries=len(arrived))
+            return 0
         with obs.span("round/buffer_fold", round=t, entries=len(arrived)):
-            total = sum(e.mass for e in arrived)
             p = self.params
-            for e in arrived:
+            for e, mass in zip(arrived, masses):
                 c = (DYN.staleness_weight(self.cfg, t - e.round)
-                     * e.mass / total)
+                     * mass / total)
                 p = self._fold_one(p, e.delta, c)
             self.params = p
         self._late_buffer = [e for e in self._late_buffer
@@ -545,7 +625,13 @@ class FederatedServer:
                     self._late_buffer.append(_BufferedUpdate(
                         delta=self._delta_step(late_agg, params0),
                         mass=float(self._host_sizes[late].sum()),
-                        round=t, arrival=t + 1))
+                        round=t, arrival=t + 1,
+                        # survivor fraction rides as a device scalar and
+                        # is fetched at fold time: a fully-quarantined
+                        # late cohort must fold with zero mass
+                        mass_scale=(rep["survivor_frac"]
+                                    if self.defended and rep is not None
+                                    else None)))
             with obs.span("round/train", round=t,
                           cohort=int(train_idx.size)):
                 if self.defended:
@@ -557,6 +643,9 @@ class FederatedServer:
                 else:
                     new_params = self.runtime.train_cohort(
                         params0, train_idx, self._host_history)
+                    if new_params is not None and self._watchdog:
+                        new_params = self._wd_blend(params0, new_params,
+                                                    self._srv_lr)
             if new_params is not None:
                 self.params = new_params
             else:
@@ -595,6 +684,11 @@ class FederatedServer:
             fetched = obs.device_get(
                 [(p.metrics, p.eval_pair, p.defense)
                  for p in self._pending])
+        # watchdog: first divergence trigger across the drained evals (at
+        # most ONE rollback per flush — later evals in the same drain ran
+        # against the already-poisoned params)
+        wd_trigger: Optional[Tuple[str, int]] = None
+        wd_healthy_seen = False
         for p, (m, ev, defs) in zip(self._pending, fetched):
             skipped = ev is None
             acc, loss = ((float(ev[0]), float(ev[1])) if not skipped
@@ -608,6 +702,13 @@ class FederatedServer:
                     obs.OBS.counter("round/diverged")
                     obs.OBS.event("defense", name="round/diverged",
                                   round=p.round)
+                if self._watchdog and wd_trigger is None:
+                    reason = self._wd_detect(acc, loss)
+                    if reason is not None:
+                        wd_trigger = (reason, p.round)
+                    else:
+                        wd_healthy_seen = True
+                        self._wd_healthy = True
             self.total_client_reward += float(m["client_reward_sum"])
             self.logs.append(RoundLog(
                 round=p.round, selected=p.selected, test_acc=acc,
@@ -630,18 +731,27 @@ class FederatedServer:
                     extra["num_banned"])
             if defs:
                 nq = sum(float(d["num_quarantined"]) for d in defs)
+                ns = sum(float(d["num_screened"]) for d in defs)
                 self.defense_totals["quarantined"] += int(nq)
+                self.defense_totals["screened"] += int(ns)
                 main = defs[-1]     # the synchronous cohort's report
                 extra.update(
                     num_quarantined=nq,
+                    num_screened=ns,
                     num_survivors=float(main["num_survivors"]),
+                    survivor_frac=float(main["survivor_frac"]),
                     clipped_frac=float(main["clipped_frac"]),
                     update_norm_p50=float(main["update_norm_p50"]),
-                    update_norm_p99=float(main["update_norm_p99"]))
+                    update_norm_p99=float(main["update_norm_p99"]),
+                    defense_pressure=float(main["defense_pressure"]))
                 if nq > 0:
                     obs.OBS.counter("defense/quarantined", int(nq))
                     obs.OBS.event("defense", name="quarantine",
                                   round=p.round, quarantined=int(nq))
+                if ns > 0:
+                    obs.OBS.counter("defense/screened", int(ns))
+                    obs.OBS.event("defense", name="band_screen",
+                                  round=p.round, screened=int(ns))
             obs.OBS.record_round(
                 p.round, test_acc=acc, test_loss=loss,
                 energy_std=float(m["energy_std"]),
@@ -652,7 +762,99 @@ class FederatedServer:
                 num_selected=int(p.selected.size),
                 eval_skipped=skipped, **extra)
         self._pending.clear()
+        if self._watchdog:
+            if wd_trigger is not None:
+                self._wd_rollback(*wd_trigger)
+            elif wd_healthy_seen:
+                # the newest drained eval vouches for the CURRENT params:
+                # snapshot at this healthy boundary
+                self._wd_snapshot(self.logs[-1].round if self.logs else 0)
         obs.flush()        # the logging boundary: sinks see I/O only here
+
+    # -- divergence watchdog -------------------------------------------
+    def _wd_detect(self, acc: float, loss: float) -> Optional[str]:
+        """Classify one drained eval: None = healthy (detector state
+        advances), else the divergence reason.  Loss is judged against a
+        slow EMA (spike = watchdog_loss_mult x EMA, with a +0.1 absolute
+        slack so near-zero losses don't trip on noise), accuracy against
+        its running peak."""
+        cfg = self.cfg
+        if not (np.isfinite(acc) and np.isfinite(loss)):
+            return "non_finite_eval"
+        if (self._wd_loss_ema is not None
+                and loss > cfg.watchdog_loss_mult * self._wd_loss_ema + 0.1):
+            return "loss_spike"
+        if acc < self._wd_acc_peak - cfg.watchdog_acc_drop:
+            return "acc_collapse"
+        self._wd_loss_ema = (loss if self._wd_loss_ema is None
+                             else 0.5 * self._wd_loss_ema + 0.5 * loss)
+        self._wd_acc_peak = max(self._wd_acc_peak, acc)
+        return None
+
+    def _wd_snapshot(self, t: int) -> None:
+        """Push the current server state onto the checkpoint ring: the
+        tree refs are immutable device arrays, so this is O(host mirrors)
+        — no device round-trip, no disk."""
+        self._wd_ring.append(_RingEntry(
+            round=t, tree=self._ckpt_tree(),
+            reward=self.total_client_reward,
+            last_eval=self._last_eval,
+            dyn_rng_state=(deepcopy(self._dyn_rng.bit_generator.state)
+                           if self.dynamics else None),
+            host_avail=(self._host_avail.copy() if self.dynamics
+                        else None)))
+        self.watchdog_totals["snapshots"] += 1
+
+    def _wd_rollback(self, reason: str, bad_round: int) -> None:
+        """Restore the newest healthy ring entry, tighten the defense,
+        decay the server LR and perturb the key chain so the retried
+        rounds explore a different stochastic path.  If the previous
+        rollback never produced a healthy eval, the newest entry itself
+        is suspect (snapshotted ahead of its validating eval) — it is
+        discarded and the next-older entry restores instead."""
+        cfg = self.cfg
+        if not self._wd_ring:
+            return
+        if not self._wd_healthy and len(self._wd_ring) > 1:
+            self._wd_ring.pop()
+        e = self._wd_ring[-1]
+        tree = e.tree
+        self._wd_rollbacks += 1
+        self.params = tree["params"]
+        self.state = tree["state"]
+        # perturbed key chain: replaying the exact keys would walk the
+        # exact same path back into the divergence
+        self.key = jax.random.fold_in(
+            tree["key"], np.uint32(0x5AFE + self._wd_rollbacks))
+        self._host_history = np.asarray(tree["host_history"],
+                                        np.int64).copy()
+        if self.dynamics:
+            self.dyn_state = DYN.DynamicsState(avail=tree["dyn_avail"])
+            self._dyn_key = tree["dyn_key"]
+            self._host_avail = e.host_avail.copy()
+            self._dyn_rng.bit_generator.state = deepcopy(e.dyn_rng_state)
+            # in-flight late updates were trained from abandoned params
+            self._late_buffer = []
+        if self.defended:
+            # escalate from the CURRENT tighten, not the snapshot's: a
+            # second rollback onto the same restore point retries with a
+            # tighter band than the first, not an identical one
+            ds = tree["defense_state"]
+            if ds.tighten is not None:
+                ds = dc_replace(ds, tighten=self._defense_state.tighten
+                                * jnp.float32(cfg.watchdog_tighten))
+            self._defense_state = ds
+        self._srv_lr = self._srv_lr * jnp.float32(cfg.watchdog_lr_decay)
+        self.total_client_reward = e.reward
+        self._last_eval = e.last_eval
+        self._wd_loss_ema = None
+        self._wd_acc_peak = float("-inf")
+        self._wd_healthy = False
+        self.watchdog_totals["rollbacks"] = self._wd_rollbacks
+        obs.OBS.counter("watchdog/rollbacks")
+        obs.OBS.event("watchdog", name="rollback", round=bad_round,
+                      restored_round=e.round, reason=reason,
+                      rollbacks=self._wd_rollbacks)
 
     # -- crash tolerance -----------------------------------------------
     def _ckpt_tree(self) -> Dict[str, Any]:
@@ -669,7 +871,9 @@ class FederatedServer:
             tree["dyn_avail"] = self.dyn_state.avail
             tree["dyn_key"] = self._dyn_key
         if self.defended:
-            tree["clip_state"] = self._clip_state
+            tree["defense_state"] = self._defense_state
+        if self._watchdog:
+            tree["server_lr"] = self._srv_lr
         return tree
 
     def save_checkpoint(self, path: str, step: int) -> None:
@@ -684,6 +888,8 @@ class FederatedServer:
             # silently diverging (the restored scheme_state pytree and
             # the key-consumption pattern are both scheme-shaped)
             "scheme_select": self.cfg.scheme_select}
+        if self._watchdog:
+            extra["watchdog_rollbacks"] = self._wd_rollbacks
         if self.dynamics:
             # the replacement sampler's host rng state is json-friendly
             # (PCG64 state dict of ints) — resumed draws continue the
@@ -730,7 +936,9 @@ class FederatedServer:
             self._host_clusters = np.asarray(
                 obs.device_get(self.state.clusters), np.int64)
         if self.defended:
-            self._clip_state = tree["clip_state"]
+            self._defense_state = tree["defense_state"]
+        if self._watchdog:
+            self._srv_lr = tree["server_lr"]
         manifest = path.removesuffix(".npz") + ".json"
         if os.path.exists(manifest):
             with open(manifest) as f:
@@ -740,6 +948,10 @@ class FederatedServer:
             st = extra.get("dyn_rng_state")
             if self.dynamics and st is not None:
                 self._dyn_rng.bit_generator.state = st
+            if self._watchdog:
+                self._wd_rollbacks = int(
+                    extra.get("watchdog_rollbacks", 0))
+                self.watchdog_totals["rollbacks"] = self._wd_rollbacks
         return step
 
     def run_round(self, t: int) -> RoundLog:
@@ -784,17 +996,25 @@ class FederatedServer:
         if warmup is not None:    # device runtime: compile every class
             with obs.span("run/warmup"):
                 warmup(self.params)
+        if self._watchdog and not self._wd_ring:
+            # seed the ring with the pre-training state so even a
+            # round-0 divergence has a healthy entry to roll back to
+            self._wd_snapshot(start - 1)
         T = rounds if rounds is not None else self.cfg.rounds
         for t in range(start, T):
             printing = verbose and (t % 5 == 0 or t == T - 1)
             final = t == T - 1
+            eval_now = self._eval_due(t, final=final)
             if audit_sync and t >= audit_warm_rounds:
                 with obs.sync_audit():
-                    self._dispatch_round(t, self._eval_due(t, final=final),
-                                         final=final)
+                    self._dispatch_round(t, eval_now, final=final)
             else:
-                self._dispatch_round(t, self._eval_due(t, final=final),
-                                     final=final)
+                self._dispatch_round(t, eval_now, final=final)
+            if self._watchdog and eval_now and not printing:
+                # the detector lives at flush boundaries: with the
+                # watchdog on, every eval round IS a flush boundary so a
+                # divergence is caught within one eval cadence
+                self._flush_pending()
             if printing:
                 self._flush_pending()
                 log = self.logs[-1]

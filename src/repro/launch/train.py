@@ -101,7 +101,10 @@ def run_paper(args) -> dict:
         aggregation=args.aggregation, buffer_goal=args.buffer_goal,
         buffer_timeout=args.buffer_timeout,
         adversary_frac=args.adversary_frac, attack=args.attack,
-        defense=args.defense)
+        attack_scale=args.attack_scale, defense=args.defense,
+        defense_mode=args.defense_mode,
+        reputation_mode=args.reputation_mode,
+        watchdog=args.watchdog, watchdog_ring=args.watchdog_ring)
     train, test = make_image_dataset(args.dataset,
                                      n_train=args.pool, n_test=args.pool // 6,
                                      seed=args.seed)
@@ -144,10 +147,18 @@ def run_paper(args) -> dict:
     if srv.defended:
         out["defense"] = {
             "attack": cfg.attack, "adversary_frac": cfg.adversary_frac,
-            "defense": cfg.defense,
+            "defense": cfg.defense, "defense_mode": cfg.defense_mode,
+            "reputation_mode": cfg.reputation_mode,
             "num_adversaries": int(srv._adv_mask.sum()),
             "num_quarantined": srv.defense_totals["quarantined"],
+            "num_screened": srv.defense_totals["screened"],
             "num_banned_final": srv.defense_totals["banned_final"],
+        }
+    if srv.cfg.watchdog_enabled:
+        out["watchdog"] = {
+            "ring": cfg.watchdog_ring,
+            "rollbacks": srv.watchdog_totals["rollbacks"],
+            "snapshots": srv.watchdog_totals["snapshots"],
         }
     return out
 
@@ -361,12 +372,21 @@ def main():
                          "runs stay bit-identical to the attack-free "
                          "path)")
     ap.add_argument("--attack", default="none",
-                    choices=["none", "nan", "scale", "signflip", "noise"],
+                    choices=["none", "nan", "scale", "signflip", "noise",
+                             "sub_clip", "alie", "on_off"],
                     help="corruption model applied to adversarial "
                          "winners' param deltas: 'nan' poisons, 'scale' "
                          "amplifies, 'signflip' amplifies and negates, "
                          "'noise' adds gaussian noise at attack-scale x "
-                         "the cohort RMS delta")
+                         "the cohort RMS delta; ADAPTIVE attacks observe "
+                         "the defense: 'sub_clip' pushes against the "
+                         "honest mean at a norm just under the clip "
+                         "threshold, 'alie' colludes on mean - z*std "
+                         "(inside the trimmed band), 'on_off' alternates "
+                         "clean/dirty phases to farm reputation")
+    ap.add_argument("--attack-scale", type=float, default=25.0,
+                    help="attack magnitude multiplier (scale/signflip/"
+                         "noise/on_off)")
     ap.add_argument("--defense", default="none",
                     choices=["none", "clip", "trimmed", "median"],
                     help="screened robust aggregation "
@@ -376,6 +396,32 @@ def main():
                          "norm-clips to a running-median threshold, "
                          "'trimmed'/'median' aggregate coordinate-wise; "
                          "'none' is the undefended FedAvg baseline")
+    ap.add_argument("--defense-mode", default="static",
+                    choices=["static", "adaptive"],
+                    help="'adaptive' auto-tunes the screen: survivor "
+                         "norms outside a running median + k*MAD band "
+                         "are excluded and fractionally struck, with k "
+                         "tightening under attack pressure (rejection-"
+                         "rate EMA) and relaxing when it falls; 'static' "
+                         "is PR 8's fixed-threshold behavior")
+    ap.add_argument("--reputation-mode", default="ban",
+                    choices=["ban", "price"],
+                    help="'ban' hard-excludes clients at or above the "
+                         "strike threshold (bit-identical to the "
+                         "original behavior); 'price' multiplies "
+                         "(1 + gain*strikes) into the effective bid at "
+                         "the auction ranking step — tainted clients "
+                         "must underbid to win, payment stays on the "
+                         "true bid")
+    ap.add_argument("--watchdog", default="off", choices=["off", "on"],
+                    help="divergence watchdog: keep a ring of healthy "
+                         "snapshots, detect non-finite/spiking evals, "
+                         "roll back to the newest healthy snapshot, "
+                         "tighten the defense and decay the server LR "
+                         "(every rollback is a 'watchdog' obs event)")
+    ap.add_argument("--watchdog-ring", type=int, default=3,
+                    help="watchdog: number of healthy snapshots kept in "
+                         "the rollback ring")
     ap.add_argument("--checkpoint-every", type=int, default=0,
                     help="snapshot server params + selection/defense "
                          "state every N rounds (0 disables)")
@@ -425,10 +471,17 @@ def main():
                 f"wall={result['wall_s']:.0f}s", always=True)
     if "defense" in result:
         d = result["defense"]
-        obs.log(f"defense {d['defense']!r} vs attack {d['attack']!r}: "
-                f"adversaries={d['num_adversaries']} "
+        obs.log(f"defense {d['defense']!r} ({d['defense_mode']}, "
+                f"reputation={d['reputation_mode']}) vs attack "
+                f"{d['attack']!r}: adversaries={d['num_adversaries']} "
                 f"quarantined={d['num_quarantined']} "
+                f"screened={d['num_screened']} "
                 f"banned={d['num_banned_final']}", always=True)
+    if "watchdog" in result:
+        w = result["watchdog"]
+        obs.log(f"watchdog: rollbacks={w['rollbacks']} "
+                f"snapshots={w['snapshots']} (ring={w['ring']})",
+                always=True)
     obs.flush()
 
 

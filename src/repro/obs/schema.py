@@ -38,7 +38,7 @@ import sys
 from typing import Any, Dict, List, Optional
 
 KINDS = ("meta", "round", "span", "counter", "gauge", "jax_stats", "log",
-         "dynamics", "defense")
+         "dynamics", "defense", "watchdog")
 
 REQUIRED: Dict[str, tuple] = {
     "round": ("round", "test_acc", "test_loss", "energy_std", "mean_bid",
@@ -50,9 +50,14 @@ REQUIRED: Dict[str, tuple] = {
     # fleet-dynamics events (round/empty, buffer/fold) — see
     # repro.core.server and DESIGN.md §Fleet dynamics
     "dynamics": ("name",),
-    # defended-aggregation events (quarantine, round/diverged) — see
-    # repro.core.aggregation and DESIGN.md §Threat model
+    # defended-aggregation events (quarantine, band_screen,
+    # round/diverged) — see repro.core.aggregation and DESIGN.md
+    # §Threat model
     "defense": ("name",),
+    # divergence-watchdog events: a ``rollback`` event additionally
+    # carries round / restored_round / reason (checked below — the
+    # self-healing CI smoke asserts at least one)
+    "watchdog": ("name",),
 }
 
 _EPS = 5e-3   # span clock tolerance (perf_counter rounding at 1e-6 + loop)
@@ -77,13 +82,22 @@ def _is_num(v: Any) -> bool:
 def validate_events(events: List[Dict[str, Any]],
                     rounds: Optional[int] = None,
                     eval_every: Optional[int] = None,
-                    scheme_select: Optional[str] = None) -> List[str]:
-    """Return a list of human-readable schema violations (empty = valid)."""
+                    scheme_select: Optional[str] = None,
+                    reputation_mode: Optional[str] = None,
+                    min_rollbacks: Optional[int] = None) -> List[str]:
+    """Return a list of human-readable schema violations (empty = valid).
+
+    ``reputation_mode="price"`` additionally requires every round row to
+    carry the numeric trust-score scalars (``trust_mean`` /
+    ``trust_min`` in (0, 1]); ``min_rollbacks=n`` requires at least n
+    well-formed ``watchdog`` rollback events (the self-healing smoke's
+    assertion that the watchdog actually fired)."""
     errs: List[str] = []
     spans: Dict[int, Dict[str, Any]] = {}
     round_rows: Dict[int, Dict[str, Any]] = {}
     dispatch_rounds: List[int] = []
     n_drains = 0
+    n_rollbacks = 0
 
     for i, e in enumerate(events):
         if not isinstance(e, dict):
@@ -98,6 +112,19 @@ def validate_events(events: List[Dict[str, Any]],
         for f in REQUIRED.get(kind, ()):
             if f not in e:
                 errs.append(f"event {i} ({kind}): missing field {f!r}")
+        if kind == "watchdog" and e.get("name") == "rollback":
+            ok_rb = True
+            for f in ("round", "restored_round"):
+                if not _is_num(e.get(f)):
+                    errs.append(f"event {i} (watchdog rollback): "
+                                f"non-numeric {f!r}: {e.get(f)!r}")
+                    ok_rb = False
+            if not isinstance(e.get("reason"), str):
+                errs.append(f"event {i} (watchdog rollback): missing "
+                            f"string 'reason', got {e.get('reason')!r}")
+                ok_rb = False
+            if ok_rb:
+                n_rollbacks += 1
         if kind == "round" and _is_num(e.get("round")):
             r = int(e["round"])
             if r in round_rows:
@@ -193,6 +220,23 @@ def validate_events(events: List[Dict[str, Any]],
                     errs.append(
                         f"round {r}: scheme {scheme_select!r} requires "
                         f"numeric {f!r}, got {e.get(f)!r}")
+
+    # reputation-pricing scalar series: the continuous trust score must
+    # be logged every round, and it lives in (0, 1] by construction
+    if reputation_mode == "price":
+        for r, e in sorted(round_rows.items()):
+            for f in ("trust_mean", "trust_min"):
+                v = e.get(f)
+                if not _is_num(v):
+                    errs.append(f"round {r}: reputation_mode='price' "
+                                f"requires numeric {f!r}, got {v!r}")
+                elif not 0.0 < v <= 1.0:
+                    errs.append(f"round {r}: {f}={v!r} outside (0, 1]")
+
+    # watchdog rollback floor (self-healing smoke)
+    if min_rollbacks is not None and n_rollbacks < int(min_rollbacks):
+        errs.append(f"watchdog: {n_rollbacks} well-formed rollback "
+                    f"event(s), expected >= {min_rollbacks}")
     return errs
 
 
@@ -224,11 +268,19 @@ def main() -> None:
                          "round row carries fairness_hist_std, and "
                          "stateful schemes (longterm_auction) their "
                          "budget_spent/budget_remaining ledger")
+    ap.add_argument("--reputation-mode", default=None,
+                    help="'price' asserts every round row carries the "
+                         "numeric trust_mean/trust_min scalars in (0, 1]")
+    ap.add_argument("--min-rollbacks", type=int, default=None,
+                    help="assert at least N well-formed watchdog "
+                         "rollback events")
     args = ap.parse_args()
     events = load_jsonl(args.path)
     errs = validate_events(events, rounds=args.rounds,
                            eval_every=args.eval_every,
-                           scheme_select=args.scheme_select)
+                           scheme_select=args.scheme_select,
+                           reputation_mode=args.reputation_mode,
+                           min_rollbacks=args.min_rollbacks)
     if errs:
         for e in errs:
             print(f"SCHEMA: {e}", file=sys.stderr)

@@ -55,8 +55,12 @@ DROPPED = 3
 
 STRAGGLER_PROFILES = ("energy", "uniform", "lognormal", "none")
 
-# update-corruption attacks (repro.core.aggregation screens them)
-ATTACKS = ("none", "nan", "scale", "signflip", "noise")
+# update-corruption attacks (repro.core.aggregation screens them); the
+# last three are ADAPTIVE: they observe the defense's running state
+# (the clip EMA / honest cohort statistics / the round counter) and
+# shape their perturbation to slip under static thresholds
+ATTACKS = ("none", "nan", "scale", "signflip", "noise",
+           "sub_clip", "alie", "on_off")
 
 # fold_in tag separating the dynamics chain from the selection chain
 _DYN_STREAM_TAG = 0x5D7A11CE
@@ -121,8 +125,30 @@ def adversary_mask(cfg: FLConfig) -> jnp.ndarray:
     return jnp.zeros((n,), bool).at[perm[:m]].set(True)
 
 
+def _honest_stats(deltas: jnp.ndarray, adv: jnp.ndarray,
+                  valid: jnp.ndarray):
+    """Colluding-adversary view of the cohort: mean, per-coordinate std
+    and median l2 norm of the HONEST rows (the classic omniscient-
+    adversary assumption — colluders pool their observations of the
+    benign updates to shape an attack that blends in)."""
+    ok = valid & ~adv
+    okf = ok[:, None]
+    cnt = jnp.maximum(ok.sum(), 1).astype(jnp.float32)
+    mean = jnp.where(okf, deltas, 0.0).sum(axis=0) / cnt
+    var = jnp.where(okf, jnp.square(deltas - mean), 0.0).sum(axis=0) / cnt
+    std = jnp.sqrt(var)
+    norms = jnp.sqrt(jnp.square(jnp.where(okf, deltas, 0.0)).sum(axis=1))
+    sorted_n = jnp.sort(jnp.where(ok, norms, jnp.inf))
+    v = ok.sum()
+    idx = jnp.clip((0.5 * (v - 1).astype(jnp.float32)).astype(jnp.int32),
+                   0, deltas.shape[0] - 1)
+    med_norm = jnp.where(v > 0, jnp.take(sorted_n, idx), 0.0)
+    return mean, std, med_norm
+
+
 def corrupt_updates(cfg: FLConfig, key, deltas: jnp.ndarray,
-                    adv: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+                    adv: jnp.ndarray, valid: jnp.ndarray,
+                    clip_ema=None, round_idx=None) -> jnp.ndarray:
     """Perturb the adversarial rows of a (C, D) flat param-delta matrix
     — the on-device, post-local-training corruption step.  Pure and
     jittable (``cfg`` is static); honest and padding rows pass through
@@ -135,6 +161,22 @@ def corrupt_updates(cfg: FLConfig, key, deltas: jnp.ndarray,
         gradient-ascent direction);
       * ``noise``    — add Gaussian noise with std ``attack_scale`` x
         the cohort's honest RMS delta magnitude.
+
+    Adaptive attacks (they read the defense's running state — the fused
+    screened program passes its ``clip_ema`` carry and the round index
+    in, so threshold awareness costs no extra host sync):
+
+      * ``sub_clip`` — colluders send the NEGATED honest mean direction
+        scaled to ``sub_clip_margin x clip_mult x`` the clip EMA (the
+        static clip threshold): maximal drag that a fixed-threshold clip
+        never touches.  Unseeded EMA (round 0) falls back to the honest
+        median norm the EMA is about to seed on.
+      * ``alie``     — "a little is enough"-style collusion: rows move
+        to honest mean minus ``alie_z x`` the per-coordinate honest
+        std — inside the trimmed-mean band for small z.
+      * ``on_off``   — alternates ``onoff_period`` dirty rounds (the
+        ``scale`` attack) with as many clean ones, farming decayed
+        reputation back between bursts.
     """
     a = cfg.attack
     if a == "none" or not cfg.adversary_enabled:
@@ -154,6 +196,24 @@ def corrupt_updates(cfg: FLConfig, key, deltas: jnp.ndarray,
         noise = (jax.random.normal(key, deltas.shape, deltas.dtype)
                  * cfg.attack_scale * rms)
         return jnp.where(hit, deltas + noise, deltas)
+    if a == "sub_clip":
+        mean, _, med_norm = _honest_stats(deltas, adv, valid)
+        ce = jnp.float32(0.0) if clip_ema is None else clip_ema
+        base = jnp.where(ce > 0, ce, med_norm)
+        target = cfg.sub_clip_margin * cfg.clip_mult * base
+        mnorm = jnp.sqrt(jnp.square(mean).sum())
+        row = -mean / jnp.maximum(mnorm, 1e-12) * target
+        return jnp.where(hit, row[None, :], deltas)
+    if a == "alie":
+        mean, std, _ = _honest_stats(deltas, adv, valid)
+        row = mean - cfg.alie_z * std
+        return jnp.where(hit, row[None, :], deltas)
+    if a == "on_off":
+        period = max(int(cfg.onoff_period), 1)
+        r = jnp.int32(0) if round_idx is None \
+            else jnp.asarray(round_idx, jnp.int32)
+        active = (r // period) % 2 == 0
+        return jnp.where(hit & active, cfg.attack_scale * deltas, deltas)
     raise ValueError(f"unknown attack={a!r}; expected {ATTACKS}")
 
 

@@ -96,6 +96,67 @@ def test_key_set_mismatch_asserts(tmp_path):
 
 
 # ----------------------------------------------------------------------
+# checkpoint hardening: atomic writes + integrity digest
+# ----------------------------------------------------------------------
+
+def test_truncated_snapshot_raises_checkpoint_corrupt(tmp_path):
+    import os
+    path = str(tmp_path / "trunc")
+    tree = {"w": jnp.arange(64, dtype=jnp.float32)}
+    CKPT.save(path, tree)
+    size = os.path.getsize(path + ".npz")
+    with open(path + ".npz", "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CKPT.CheckpointCorrupt, match="integrity"):
+        CKPT.restore(path, tree)
+
+
+def test_bitrot_snapshot_raises_checkpoint_corrupt(tmp_path):
+    path = str(tmp_path / "rot")
+    tree = {"w": jnp.arange(64, dtype=jnp.float32)}
+    CKPT.save(path, tree)
+    with open(path + ".npz", "r+b") as f:
+        f.seek(40)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(CKPT.CheckpointCorrupt, match="integrity"):
+        CKPT.restore(path, tree)
+
+
+def test_garbage_manifest_raises_checkpoint_corrupt(tmp_path):
+    path = str(tmp_path / "badjson")
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    CKPT.save(path, tree)
+    with open(path + ".json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(CKPT.CheckpointCorrupt, match="manifest"):
+        CKPT.restore(path, tree)
+
+
+def test_digestless_manifest_still_restores(tmp_path):
+    # pre-hardening manifests carry no digest: they must keep loading
+    import json
+    path = str(tmp_path / "legacy")
+    tree = {"w": jnp.arange(4, dtype=jnp.float32)}
+    CKPT.save(path, tree)
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    del manifest["digest"]
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+    out, _ = CKPT.restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_save_leaves_no_tmp_files(tmp_path):
+    import os
+    path = str(tmp_path / "atomic")
+    CKPT.save(path, {"w": jnp.zeros(3)})
+    names = sorted(os.listdir(tmp_path))
+    assert names == ["atomic.json", "atomic.npz"]
+
+
+# ----------------------------------------------------------------------
 # server crash/resume
 # ----------------------------------------------------------------------
 

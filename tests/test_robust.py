@@ -122,7 +122,7 @@ def test_corrupt_updates_identity_when_inactive():
 # screened-step estimator semantics
 # ----------------------------------------------------------------------
 
-def _screen_inputs(cfg, deltas, weights, valid, adv=None):
+def _screen_inputs(cfg, deltas, weights, valid, adv=None, round_idx=0):
     cap = deltas.shape[0]
     adv = np.zeros(cap, bool) if adv is None else np.asarray(adv)
     ids = np.where(np.asarray(valid), np.arange(cap), -1).astype(np.int32)
@@ -131,7 +131,7 @@ def _screen_inputs(cfg, deltas, weights, valid, adv=None):
     return (jnp.asarray(deltas, jnp.float32),
             jnp.asarray(weights, jnp.float32), jnp.asarray(valid),
             jnp.asarray(adv), jnp.asarray(ids), strikes,
-            jnp.float32(0.0), key)
+            AGG.init_defense_state(cfg), jnp.int32(round_idx), key)
 
 
 def test_screen_none_is_plain_weighted_sum():
@@ -213,12 +213,12 @@ def test_clip_defense_bounds_outlier_norm():
     deltas[0] *= 1e4
     w = np.full(8, 0.125, np.float32)
     valid = np.ones(8, bool)
-    agg, _, clip_state, rep = screen(
+    agg, _, dstate, rep = screen(
         *_screen_inputs(cfg, deltas, w, valid))
     honest_max = np.abs(deltas[1:]).max()
     assert np.abs(np.asarray(agg)).max() < 10 * honest_max
     assert float(rep["clipped_frac"]) > 0
-    assert float(clip_state) > 0                 # running median seeded
+    assert float(dstate.clip_ema) > 0            # running median seeded
     assert float(rep["update_norm_p99"]) >= float(rep["update_norm_p50"])
 
 
